@@ -1,0 +1,40 @@
+"""Component ablation (beyond the paper's tables): COACH with pieces
+removed, isolating where the gains come from.
+
+  offline_only   Alg. 1 partition+quant, no online component
+  exit_only      + early exits, but fixed 8-bit transfers (no Eq. 11)
+  full           + adaptive per-task precision
+"""
+
+from benchmarks.common import run_coach, scenario_arrival
+from repro.models.cnn import resnet101
+
+
+def run(out_dir=None, n_tasks=500):
+    g = resnet101()
+    rows = ["ablation,variant,latency_ms,throughput,exit_ratio,wire_kb"]
+    arr = scenario_arrival(g, "NX", 50.0)
+    for name, kw in (
+        ("offline_only", dict(online=False)),
+        ("full", dict()),
+    ):
+        r = run_coach(g, "NX", 50.0, "medium", n_tasks=n_tasks,
+                      arrival_period=arr, **kw)
+        rows.append(f"ablation,{name},{r.mean_latency_ms:.2f},"
+                    f"{r.throughput:.2f},{r.exit_ratio:.3f},"
+                    f"{r.wire_kb_per_task:.1f}")
+    # throughput view at saturation
+    for name, kw in (
+        ("offline_only_sat", dict(online=False)),
+        ("full_sat", dict()),
+    ):
+        r = run_coach(g, "NX", 50.0, "medium", n_tasks=n_tasks,
+                      arrival_factor=0.0, **kw)
+        rows.append(f"ablation,{name},{r.mean_latency_ms:.2f},"
+                    f"{r.throughput:.2f},{r.exit_ratio:.3f},"
+                    f"{r.wire_kb_per_task:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,37 @@
+"""COACH's offline component applied to every ASSIGNED architecture
+(beyond the paper's two CNNs): the layer-cost chain of each arch is
+partitioned on the TPU end/cloud profiles, demonstrating
+§Arch-applicability (DESIGN.md §4) with concrete cuts and precisions.
+
+End = one v5e chip (weak edge accelerator), cloud = a v5e pod slice,
+link = 10 GbE-class egress (the end-cloud setting COACH targets; serving
+one request, batch=1, seq=512).
+"""
+
+from repro.configs import ARCHS, get_config
+from repro.core.costs import (DeviceProfile, LinkProfile, transformer_graph)
+from repro.core.partitioner import coach_offline
+
+EDGE = DeviceProfile("edge-v5e", 197e12, efficiency=0.3)
+CLOUD = DeviceProfile("cloud-pod-slice", 197e12 * 8, efficiency=0.4)
+LINK = LinkProfile("egress", 10e9)
+
+
+def run(out_dir=None):
+    rows = ["arch_partition,arch,layers_on_end,total_nodes,bits,"
+            "T_e_ms,T_t_ms,T_c_ms,objective_ms,feasible"]
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        g = transformer_graph(cfg, batch=1, seq=512)
+        r = coach_offline(g, EDGE, CLOUD, LINK)
+        bits = sorted(set(r.decision.bits.values())) or ["-"]
+        t = r.times
+        rows.append(
+            f"arch_partition,{arch},{len(r.decision.end_set)},{len(g)},"
+            f"{'/'.join(map(str, bits))},{t.T_e*1e3:.3f},{t.T_t*1e3:.3f},"
+            f"{t.T_c*1e3:.3f},{r.objective*1e3:.3f},{r.feasible}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,33 @@
+"""Figs. 6-7: latency and throughput vs bandwidth (5-100 Mbps sweep) for
+COACH and all baselines on ResNet101/VGG16 (UCF101-like medium stream)."""
+
+from benchmarks.common import run_baseline, run_coach, scenario_arrival
+from repro.models.cnn import resnet101, vgg16
+
+BANDWIDTHS = (5.0, 10.0, 20.0, 50.0, 70.0, 100.0)
+METHODS = ("NS", "DADS", "SPINN", "JPS")
+
+
+def run(out_dir=None, n_tasks=300):
+    rows = ["fig67,model,mbps,method,latency_ms,throughput"]
+    for gname, g in (("resnet101", resnet101()), ("vgg16", vgg16())):
+        for mbps in BANDWIDTHS:
+            arr = scenario_arrival(g, "NX", mbps)
+            rl = run_coach(g, "NX", mbps, "medium", n_tasks=n_tasks,
+                           arrival_period=arr)
+            rt = run_coach(g, "NX", mbps, "medium", n_tasks=n_tasks,
+                           arrival_factor=0.0)
+            rows.append(f"fig67,{gname},{mbps},COACH,"
+                        f"{rl.mean_latency_ms:.2f},{rt.throughput:.2f}")
+            for m in METHODS:
+                bl = run_baseline(m, g, "NX", mbps, "medium",
+                                  n_tasks=n_tasks, arrival_period=arr)
+                bt = run_baseline(m, g, "NX", mbps, "medium",
+                                  n_tasks=n_tasks, arrival_factor=0.0)
+                rows.append(f"fig67,{gname},{mbps},{m},"
+                            f"{bl.mean_latency_ms:.2f},{bt.throughput:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,49 @@
+"""Kernel microbenchmarks: us/call for the UAQ quantize/dequantize and
+semantic-probe paths (jnp reference semantics jitted on this host; the
+Pallas TPU kernels are validated in interpret mode and bench-able on real
+TPUs with the same entry points)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _bench(fn, *args, iters=20) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(out_dir=None):
+    rows = ["kernels,name,us_per_call,derived"]
+    key = jax.random.PRNGKey(0)
+    for (m, n) in ((1024, 2304), (4096, 2304)):
+        x = jax.random.normal(key, (m, n))
+        for bits in (4, 8):
+            q = jax.jit(lambda t, b=bits: ref.uaq_quantize_ref(t, b))
+            us = _bench(q, x)
+            gbps = x.size * 4 / (us / 1e6) / 1e9
+            rows.append(f"kernels,uaq_quant_{m}x{n}_b{bits},{us:.1f},"
+                        f"{gbps:.2f}GB/s")
+            p, s, z = q(x)
+            dq = jax.jit(lambda pp, ss, zz, b=bits:
+                         ref.uaq_dequantize_ref(pp, ss, zz, b))
+            us = _bench(dq, p, s, z)
+            rows.append(f"kernels,uaq_dequant_{m}x{n}_b{bits},{us:.1f},")
+    xb = jax.random.normal(key, (16, 512, 256))
+    c = jax.random.normal(key, (100, 256))
+    probe = jax.jit(ref.semantic_probe_ref)
+    us = _bench(probe, xb, c)
+    rows.append(f"kernels,semantic_probe_16x512x256_L100,{us:.1f},")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,40 @@
+"""§Roofline report: reads the dry-run artifacts (experiments/dryrun/*.json)
+and prints the three-term roofline per (arch x shape x mesh):
+
+  compute    = HLO_FLOPs / peak_FLOPs            (per chip)
+  memory     = HLO_bytes / HBM_bw                (per chip)
+  collective = collective_bytes / (links x bw)   (per chip)
+
+plus the dominant term and MODEL_FLOPS / HLO_FLOPs (useful-compute ratio).
+"""
+
+import json
+from pathlib import Path
+
+DEFAULT_DIR = "experiments/dryrun"
+
+
+def run(out_dir=None, dryrun_dir=DEFAULT_DIR):
+    rows = ["roofline,arch,shape,mesh,t_compute_s,t_memory_s,"
+            "t_collective_s,bottleneck,useful_flop_frac,mem_gb_per_dev"]
+    d = Path(dryrun_dir)
+    if not d.exists():
+        rows.append("roofline,NO_DRYRUN_ARTIFACTS_RUN_dryrun_first,,,,,,,,")
+        return rows
+    for f in sorted(d.glob("*.json")):
+        rep = json.loads(f.read_text())
+        if "skipped" in rep or "error" in rep:
+            continue
+        r = rep["roofline"]
+        mem = rep.get("memory", {}).get("total_nonalias_bytes", 0) / 1e9
+        frac = rep.get("useful_flop_frac")
+        rows.append(
+            f"roofline,{rep['arch']},{rep['shape']},{rep['mesh']},"
+            f"{r['t_compute_s']:.3e},{r['t_memory_s']:.3e},"
+            f"{r['t_collective_s']:.3e},{r['bottleneck']},"
+            f"{frac if frac is None else round(frac, 4)},{mem:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

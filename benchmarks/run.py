@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  python -m benchmarks.run [--only table1,fig5] [--out experiments/bench]
+
+Prints every module's CSV and writes it under --out.
+"""
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import (ablation, arch_partition, fig1_locality,
+                        fig2_schemes, fig5_dynamic, fig6_fig7_bandwidth,
+                        kernels_bench, roofline, table1_latency,
+                        table2_context)
+
+MODULES = {
+    "fig1": fig1_locality,
+    "fig2": fig2_schemes,
+    "table1": table1_latency,
+    "table2": table2_context,
+    "fig5": fig5_dynamic,
+    "fig67": fig6_fig7_bandwidth,
+    "ablation": ablation,
+    "arch_partition": arch_partition,
+    "kernels": kernels_bench,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(MODULES))
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(MODULES)
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    for name in names:
+        t0 = time.time()
+        rows = MODULES[name].run(out_dir=str(out))
+        dt = time.time() - t0
+        text = "\n".join(rows)
+        print(text)
+        print(f"# {name}: {dt:.1f}s")
+        (out / f"{name}.csv").write_text(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

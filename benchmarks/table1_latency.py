@@ -1,0 +1,38 @@
+"""Table I: average inference latency (ms) for COACH and baselines across
+ResNet101/VGG16 x Jetson NX/TX2 (medium-correlation ImageNet-100-like
+stream, averaged over 20/50/100 Mbps like the paper's 2-100 Mbps range)."""
+
+import numpy as np
+
+from benchmarks.common import run_baseline, run_coach, scenario_arrival
+from repro.models.cnn import resnet101, vgg16
+
+BANDWIDTHS = (20.0, 50.0, 100.0)
+METHODS = ("NS", "DADS", "SPINN", "JPS")
+
+
+def run(out_dir=None, n_tasks=400):
+    rows = ["table1,model,device,method,latency_ms,accuracy"]
+    for gname, g in (("resnet101", resnet101()), ("vgg16", vgg16())):
+        for dev in ("NX", "TX2"):
+            lat = {m: [] for m in METHODS + ("COACH",)}
+            acc = {m: [] for m in METHODS + ("COACH",)}
+            for mbps in BANDWIDTHS:
+                arr = scenario_arrival(g, dev, mbps)
+                r = run_coach(g, dev, mbps, "medium", n_tasks=n_tasks,
+                              arrival_period=arr)
+                lat["COACH"].append(r.mean_latency_ms)
+                acc["COACH"].append(r.accuracy)
+                for m in METHODS:
+                    rb = run_baseline(m, g, dev, mbps, "medium",
+                                      n_tasks=n_tasks, arrival_period=arr)
+                    lat[m].append(rb.mean_latency_ms)
+                    acc[m].append(rb.accuracy)
+            for m in METHODS + ("COACH",):
+                rows.append(f"table1,{gname},{dev},{m},"
+                            f"{np.mean(lat[m]):.2f},{np.mean(acc[m]):.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,30 @@
+"""Table II: context-aware acceleration across data-correlation levels
+(UCF101-like stream): early-exit ratio, latency, transmission cost, vs the
+NoAdjust ablation (COACH offline partition, no online component)."""
+
+from benchmarks.common import run_coach, scenario_arrival
+from repro.models.cnn import resnet101, vgg16
+
+MBPS = 50.0
+
+
+def run(out_dir=None, n_tasks=500):
+    rows = ["table2,model,level,exit_ratio,latency_ms,trans_kb,accuracy"]
+    for gname, g in (("resnet101", resnet101()), ("vgg16", vgg16())):
+        arr = scenario_arrival(g, "NX", MBPS)
+        base = run_coach(g, "NX", MBPS, "medium", n_tasks=n_tasks,
+                         arrival_period=arr, online=False)
+        rows.append(f"table2,{gname},NoAdjust,-,"
+                    f"{base.mean_latency_ms:.2f},"
+                    f"{base.wire_kb_per_task:.1f},{base.accuracy:.3f}")
+        for level in ("low", "medium", "high"):
+            r = run_coach(g, "NX", MBPS, level, n_tasks=n_tasks,
+                          arrival_period=arr)
+            rows.append(f"table2,{gname},{level},{r.exit_ratio:.3f},"
+                        f"{r.mean_latency_ms:.2f},"
+                        f"{r.wire_kb_per_task:.1f},{r.accuracy:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

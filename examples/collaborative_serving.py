@@ -1,0 +1,18 @@
+"""End-to-end driver: serve a small model with batched requests through the
+full COACH system — offline partition, real JAX end/cloud segments with the
+quantized wire, semantic cache, early exits, adaptive precision, pipeline
+accounting.
+
+  PYTHONPATH=src python examples/collaborative_serving.py \
+      [--arch gemma2-2b] [--requests 200] [--correlation high]
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch.serve import main  # the launcher IS the driver
+
+if __name__ == "__main__":
+    main()

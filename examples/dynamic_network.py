@@ -1,0 +1,40 @@
+"""Dynamic-network adaptation demo (Fig. 5): bandwidth drops mid-stream;
+COACH's online component re-chooses precision per task and keeps the
+pipeline near bubble-free while baselines degrade.
+
+  PYTHONPATH=src python examples/dynamic_network.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import run_baseline, run_coach
+from repro.models.cnn import resnet101
+
+
+def main():
+    g = resnet101()
+    print("ResNet101 on Jetson-NX; bandwidth 100 -> 50 -> 20 Mbps")
+    print(f"{'bw':>6} {'COACH tp':>9} {'COACH bits':>10} {'JPS tp':>7} "
+          f"{'NS tp':>7}")
+    for mbps in (100.0, 50.0, 20.0):
+        rc = run_coach(g, "NX", mbps, "medium", n_tasks=300,
+                       arrival_factor=0.0)
+        rj = run_baseline("JPS", g, "NX", mbps, "medium", n_tasks=300,
+                          arrival_factor=0.0)
+        rn = run_baseline("NS", g, "NX", mbps, "medium", n_tasks=300,
+                          arrival_factor=0.0)
+        mean_bits = (8 * rc.wire_kb_per_task * 1e3 /
+                     max(1 - rc.exit_ratio, 1e-9))
+        print(f"{mbps:6.0f} {rc.throughput:9.1f} "
+              f"{rc.wire_kb_per_task:7.1f}KB {rj.throughput:7.1f} "
+              f"{rn.throughput:7.1f}")
+    print("\nCOACH sheds wire volume (lower bits + exits) as bandwidth "
+          "drops, holding throughput above the schedulers that cannot adapt.")
+
+
+if __name__ == "__main__":
+    main()

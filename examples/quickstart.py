@@ -1,0 +1,75 @@
+"""Quickstart: the whole COACH loop on a small model, in one script.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. build a reduced gemma2 and its layer-cost graph
+2. offline component: joint partition + quantization (Algorithm 1)
+3. split the model at the chosen group boundary (CollabRuntime)
+4. run a task: end segment -> UAQ-quantized wire packet (Pallas kernel
+   semantics) -> cloud segment; compare against the monolithic model
+5. online component: semantic-cache probe -> early exit / precision choice
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import online as ON
+from repro.core.collab import CollabRuntime
+from repro.core.costs import A6000_SERVER, JETSON_NX, WIFI_5GHZ, transformer_graph
+from repro.core.partitioner import coach_offline
+from repro.models import model as M
+
+
+def main():
+    # 1. model + cost graph -------------------------------------------------
+    cfg = get_config("gemma2-2b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    graph = transformer_graph(cfg, batch=1, seq=128)
+    print(f"model: {cfg.name}  layers={cfg.num_layers}  "
+          f"params={M.param_count(params):,}")
+
+    # 2. offline component ---------------------------------------------------
+    link = WIFI_5GHZ(50)
+    off = coach_offline(graph, JETSON_NX, A6000_SERVER, link)
+    t = off.times
+    print(f"offline: |V_e|={len(off.decision.end_set)} of {len(graph)} "
+          f"bits={sorted(set(off.decision.bits.values()))} "
+          f"T_e={t.T_e*1e3:.2f}ms T_t={t.T_t*1e3:.2f}ms T_c={t.T_c*1e3:.2f}ms "
+          f"B_c={t.B_c*1e3:.2f} B_t={t.B_t*1e3:.2f} obj={off.objective*1e3:.2f}")
+
+    # 3./4. collaborative execution ------------------------------------------
+    rt = CollabRuntime(cfg, params, cut_group=1, default_bits=8)
+    x = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab_size)
+    pkt, boundary = rt.end_step(x)
+    logits = rt.cloud_step(pkt)
+    ref = rt.monolithic(params, x)
+    rel = float(jnp.max(jnp.abs(logits - ref)) / jnp.max(jnp.abs(ref)))
+    print(f"collab: wire={pkt.wire_bytes}B (fp32 would be {boundary.size*4}B) "
+          f"rel-err={rel:.4f}")
+
+    # 5. online component -----------------------------------------------------
+    centers = jax.random.normal(jax.random.PRNGKey(2), (8, cfg.d_model))
+    sep, best, sims = rt.probe(boundary.astype(jnp.float32), centers)
+    th = ON.Thresholds(s_ext=float(np.median(np.asarray(sep))),
+                       s_adj=((1.0, 3), (0.5, 4), (0.1, 6)))
+    for i in range(4):
+        s = float(sep[i])
+        if s > th.s_ext:
+            print(f"task {i}: separability={s:.3f} -> EARLY EXIT "
+                  f"label={int(best[i])} (Eq. 10)")
+        else:
+            b = ON.choose_bits(th.required_bits(s), boundary[i].size,
+                               50e6, t.T_e, t.T_c)
+            print(f"task {i}: separability={s:.3f} -> transmit at "
+                  f"{b} bits (Eq. 11)")
+
+
+if __name__ == "__main__":
+    main()

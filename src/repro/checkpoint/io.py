@@ -1,0 +1,79 @@
+"""Pytree checkpointing: flattened-path .npz shards + a JSON manifest.
+
+No external deps (no orbax); handles arbitrary pytrees (dict/tuple/list/
+NamedTuple leaves), bfloat16 (stored as uint16 views), and atomic writes
+(tmp + rename) so a crashed writer never corrupts the latest checkpoint.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _flatten(tree) -> Tuple[dict, Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+    d = Path(ckpt_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    arrays, _ = _flatten(tree)
+    manifest = {}
+    tmp = tempfile.mkdtemp(dir=d)
+    npz = {}
+    for k, a in arrays.items():
+        if a.dtype.name == _BF16:
+            npz[k] = a.view(np.uint16)
+            manifest[k] = _BF16
+        else:
+            npz[k] = a
+            manifest[k] = a.dtype.name
+    np.savez(os.path.join(tmp, "arrays.npz"), **npz)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "dtypes": manifest}, f)
+    final = d / f"step_{step:08d}"
+    if final.exists():
+        import shutil
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return str(final)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in d.glob("step_*")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, step: int, like_tree):
+    """Restore into the structure of ``like_tree`` (shapes must match)."""
+    import jax.numpy as jnp
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    with open(d / "manifest.json") as f:
+        manifest = json.load(f)
+    data = np.load(d / "arrays.npz")
+    arrays, treedef = _flatten(like_tree)
+    leaves = []
+    for k in arrays:
+        a = data[k]
+        if manifest["dtypes"][k] == _BF16:
+            a = a.view(jnp.bfloat16)
+        leaves.append(jnp.asarray(a))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,106 @@
+"""The paper's four baselines, implemented on the same cost substrate and
+scored by the same event simulator — so Table I / Figs. 5-7 comparisons are
+apples-to-apples.
+
+  NS    (Neurosurgeon [5])  min single-task latency, chain cut, no quant.
+  DADS  [2]                 min-cut style partition for pipeline load,
+                            optimizes max(T_e, T_c); no quantization.
+  SPINN [25]                partition + fixed 8-bit quantization + early
+                            exit at a fixed confidence threshold.
+  JPS   [10]                layer-level pipeline schedule balancing the end
+                            computation and transmission stages (cloud stage
+                            neglected — the paper's critique of it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+from repro.core.costs import DeviceProfile, LinkProfile, ModelGraph
+from repro.core.partitioner import chain_flow
+from repro.core.schedule import PartitionDecision, StageTimes, evaluate_partition
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    decision: PartitionDecision
+    times: StageTimes
+    extra: Dict = dataclasses.field(default_factory=dict)
+
+
+def _chain_cuts(graph: ModelGraph):
+    """Candidate end-sets from chain-level cuts (incl. empty / full)."""
+    elems = chain_flow(graph)
+    prefix, cuts = [], [frozenset()]
+    for e in elems:
+        prefix.extend(e.ids())
+        cuts.append(frozenset(prefix))
+    return cuts
+
+
+def _eval(graph, end_set, bits_all, end_dev, cloud_dev, link, name):
+    bits = {e: bits_all for e in graph.boundary_edges(end_set) if e[0] >= 0}
+    dec = PartitionDecision(end_set, bits, name=name)
+    return dec, evaluate_partition(graph, dec, end_dev, cloud_dev, link)
+
+
+def neurosurgeon(graph: ModelGraph, end_dev: DeviceProfile,
+                 cloud_dev: DeviceProfile, link: LinkProfile) -> BaselineResult:
+    """Min end-to-end single-task latency; fp32 transfers."""
+    best = None
+    for cut in _chain_cuts(graph):
+        dec, st = _eval(graph, cut, 32, end_dev, cloud_dev, link, "ns")
+        if best is None or st.latency < best[1].latency:
+            best = (dec, st)
+    return BaselineResult(*best)
+
+
+def dads(graph: ModelGraph, end_dev, cloud_dev, link) -> BaselineResult:
+    """Heavy-load mode: min max stage (pipeline throughput) over all three
+    stages, fp32 transfers (no quantization), latency tie-break."""
+    best = None
+    for cut in _chain_cuts(graph):
+        dec, st = _eval(graph, cut, 32, end_dev, cloud_dev, link, "dads")
+        key = (st.max_stage, st.latency)
+        if best is None or key < best[2]:
+            best = (dec, st, key)
+    return BaselineResult(best[0], best[1])
+
+
+def spinn(graph: ModelGraph, end_dev, cloud_dev, link,
+          exit_ratio_hint: float = 0.0) -> BaselineResult:
+    """Latency-min partition with fixed 8-bit quantization; early exit at a
+    fixed threshold (its exit ratio is data-dependent and supplied by the
+    driver as ``exit_ratio_hint``).  Progressive device-first inference =>
+    non-empty end segment."""
+    best = None
+    for cut in _chain_cuts(graph):
+        if not cut:
+            continue
+        dec, st = _eval(graph, cut, 8, end_dev, cloud_dev, link, "spinn")
+        if best is None or st.latency < best[1].latency:
+            best = (dec, st)
+    return BaselineResult(best[0], best[1], {"exit_ratio": exit_ratio_hint})
+
+
+def jps(graph: ModelGraph, end_dev, cloud_dev, link) -> BaselineResult:
+    """Near-optimal end/transmission pipeline schedule: min max(T_e, T_t)
+    with 8-bit transfers; the cloud stage is not balanced (per the paper's
+    critique, it may become the pipeline bottleneck)."""
+    best = None
+    for cut in _chain_cuts(graph):
+        dec, st = _eval(graph, cut, 8, end_dev, cloud_dev, link, "jps")
+        key = (max(st.T_e, st.T_t), st.latency)
+        if best is None or key < best[2]:
+            best = (dec, st, key)
+    return BaselineResult(best[0], best[1])
+
+
+BASELINES = {
+    "NS": neurosurgeon,
+    "DADS": dads,
+    "SPINN": spinn,
+    "JPS": jps,
+}

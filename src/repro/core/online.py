@@ -1,0 +1,190 @@
+"""COACH online component (§III-C): label semantic centers with a caching
+mechanism, task separability, early exit, and adaptive quantization
+adjustment under dynamic bandwidth.
+
+All math follows the paper:
+  Eq. 7  running-mean center update
+  Eq. 8  cosine similarity degrees  T = {t_j}
+  Eq. 9  task separability          S = ||T||_2 (t_H - t_SH) t_H / t_SH
+  Eq. 10 early-exit result          R = argmax_j t_j
+  Eq. 11 bubble-minimizing precision Q_c >= Q_r
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def gap_features(x: np.ndarray) -> np.ndarray:
+    """Global Average Pooling: (C,H,W) -> (C,)  or (S,D) -> (D,)  or batched
+    (B,...) -> (B,C|D).  Concentrates intermediate data into task features F."""
+    x = np.asarray(x)
+    if x.ndim == 2:
+        return x.mean(axis=0)
+    if x.ndim == 3:
+        return x.mean(axis=(1, 2)) if x.shape[0] < x.shape[-1] else x.mean(axis=0).mean(axis=0)
+    if x.ndim == 4:  # (B,C,H,W)
+        return x.mean(axis=(2, 3))
+    raise ValueError(f"unsupported feature rank {x.ndim}")
+
+
+def cosine(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    num = a @ b.T if b.ndim == 2 else a @ b
+    den = (np.linalg.norm(a, axis=-1, keepdims=b.ndim == 2) *
+           np.linalg.norm(b, axis=-1))
+    sim = num / np.maximum(den, 1e-12)
+    return (sim + 1.0) / 2.0  # map [-1,1] -> [0,1] per Eq. 8 range
+
+
+def separability(sims: np.ndarray) -> float:
+    """Eq. 9 on one similarity-degree vector T."""
+    t = np.sort(sims)[::-1]
+    t_h, t_sh = float(t[0]), float(t[1]) if len(t) > 1 else 1e-12
+    return float(np.linalg.norm(sims) * (t_h - t_sh) * t_h / max(t_sh, 1e-12))
+
+
+@dataclasses.dataclass
+class OnlineDecision:
+    early_exit: bool
+    result: Optional[int]       # label if early-exited (Eq. 10)
+    separability: float
+    bits: Optional[int]         # chosen Q_c if transmitted
+    required_bits: Optional[int]  # Q_r from separability thresholds
+
+
+class SemanticCache:
+    """Label semantic centers T_c = {T_j^c} with running-mean updates.
+
+    ``max_count`` bounds m_j in Eq. 7, turning the running mean into a
+    sliding semantic window so centers keep tracking non-stationary task
+    streams (video scenes drift); max_count=None is the paper's literal
+    unbounded mean."""
+
+    def __init__(self, n_labels: int, dim: int, max_count: Optional[int] = 16):
+        self.centers = np.zeros((n_labels, dim), np.float64)
+        self.counts = np.zeros((n_labels,), np.int64)
+        self.max_count = max_count
+
+    def warm_up(self, feats: np.ndarray, labels: np.ndarray):
+        for f, j in zip(feats, labels):
+            self.update(f, int(j))
+
+    def update(self, feat: np.ndarray, label: int):
+        m = self.counts[label]
+        if self.max_count is not None:
+            m = min(m, self.max_count)
+        self.centers[label] = (m * self.centers[label] + feat) / (m + 1)  # Eq. 7
+        self.counts[label] += 1
+
+    def similarities(self, feat: np.ndarray) -> np.ndarray:
+        valid = self.counts > 0
+        sims = np.zeros(len(self.centers))
+        if valid.any():
+            sims[valid] = cosine(feat[None], self.centers[valid])[0]
+        return sims
+
+
+@dataclasses.dataclass
+class Thresholds:
+    s_ext: float                       # early-exit threshold
+    s_adj: Tuple[Tuple[float, int], ...]  # (separability floor, Q_r bits), desc
+
+    def required_bits(self, s: float, default: int = 8) -> int:
+        for floor, bits in self.s_adj:
+            if s >= floor:
+                return bits
+        return default
+
+
+def calibrate_thresholds(cache: SemanticCache, feats: np.ndarray,
+                         labels: np.ndarray, eps: float = 0.005,
+                         bit_levels: Sequence[int] = (3, 4, 5, 6, 8)) -> Thresholds:
+    """One-time threshold calibration on the calibration set D (§III-C).
+
+    s_ext: smallest separability quantile whose early-exit error <= eps.
+    s_adj: separability floors assigning lower bits to more separable tasks
+    (spatial-locality observation, Fig. 1b)."""
+    seps, correct = [], []
+    for f, y in zip(feats, labels):
+        sims = cache.similarities(f)
+        seps.append(separability(sims))
+        correct.append(int(np.argmax(sims)) == int(y))
+    seps = np.asarray(seps)
+    correct = np.asarray(correct, bool)
+
+    order = np.argsort(-seps)  # most separable first
+    s_ext = float("inf")
+    errs = np.cumsum(~correct[order])
+    for k in range(len(order), 0, -1):
+        if errs[k - 1] <= eps * k:
+            s_ext = float(seps[order[k - 1]])
+            break
+
+    qs = np.quantile(seps, np.linspace(0.9, 0.1, len(bit_levels)))
+    s_adj = tuple((float(q), int(b)) for q, b in zip(qs, bit_levels))
+    return Thresholds(s_ext=s_ext, s_adj=s_adj)
+
+
+def choose_bits(required: int, elems: int, bandwidth_bps: float,
+                T_e: float, T_c: float,
+                levels: Sequence[int] = (3, 4, 5, 6, 8, 12, 16)) -> int:
+    """Eq. 11: among Q_c >= Q_r, minimize |T_t' - max{T_e, T_t', T_c}|.
+
+    Read non-degenerately: once T_t' itself becomes the max the paper's
+    expression is 0 for *any* larger precision, which would let the link
+    saturate; the intent is to fill idle link time up to the other stages'
+    bound.  So we minimize the distance to target = max(T_e, T_c),
+    preferring not to exceed it, and break ties toward higher precision
+    (free accuracy margin)."""
+    target = max(T_e, T_c)
+    best = None
+    for b in levels:
+        if b < required:
+            continue
+        t_t = elems * b / bandwidth_bps
+        key = (abs(t_t - target), t_t > target, -b)
+        if best is None or key < best[0]:
+            best = (key, b)
+    return best[1] if best is not None else max(required, levels[-1])
+
+
+class OnlineScheduler:
+    """Per-task online decision pipeline (Alg. 1 online component)."""
+
+    def __init__(self, cache: SemanticCache, thresholds: Thresholds,
+                 boundary_elems: int, T_e: float, T_c: float,
+                 update_centers: bool = True):
+        self.cache = cache
+        self.th = thresholds
+        self.elems = boundary_elems
+        self.T_e, self.T_c = T_e, T_c
+        self.update_centers = update_centers
+        self.bw_ema: Optional[float] = None
+
+    def observe_bandwidth(self, bps: float, alpha: float = 0.5):
+        self.bw_ema = bps if self.bw_ema is None else \
+            alpha * bps + (1 - alpha) * self.bw_ema
+
+    def step(self, feat: np.ndarray, bandwidth_bps: Optional[float] = None
+             ) -> OnlineDecision:
+        if bandwidth_bps is not None:
+            self.observe_bandwidth(bandwidth_bps)
+        sims = self.cache.similarities(feat)
+        s = separability(sims)
+        if s > self.th.s_ext:
+            j = int(np.argmax(sims))  # Eq. 10
+            if self.update_centers:
+                self.cache.update(feat, j)
+            return OnlineDecision(True, j, s, None, None)
+        q_r = self.th.required_bits(s)
+        bw = self.bw_ema or 1e6
+        q_c = choose_bits(q_r, self.elems, bw, self.T_e, self.T_c)
+        return OnlineDecision(False, None, s, q_c, q_r)
+
+    def report_label(self, feat: np.ndarray, label: int):
+        """Cloud returned the true result: refresh the semantic center."""
+        if self.update_centers:
+            self.cache.update(feat, label)

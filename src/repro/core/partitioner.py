@@ -1,0 +1,262 @@
+"""COACH offline component — Algorithm 1.
+
+Recursive divide-and-conquer over the model DAG:
+
+  1. cluster parallel branches into *virtual blocks*, reducing the DAG to a
+     chain flow  B = {b_1 .. b_n}  (Fig. 4);
+  2. sweep chain-level cuts; per boundary tensor, pick quantization
+     precision by dichotomous search against the accuracy oracle (Eq. 1)
+     and then relax bits upward if that lowers the bubble objective;
+  3. recurse into virtual blocks crossing the best cuts: each internal
+     branch is cut independently at a shared flop-ratio grid (this is what
+     turns the O(c^n) joint branch search into O(c·n));
+  4. keep the argmin of Eq. 6 subject to Eq. 1/3/4.
+
+Every candidate is scored with the executable event semantics in
+``repro.core.schedule`` (no closed-form approximations), so the chosen
+strategy is exactly what the pipeline executor will see.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.costs import DeviceProfile, LinkProfile, LayerNode, ModelGraph
+from repro.core.schedule import Edge, PartitionDecision, StageTimes, evaluate_partition
+
+AccOracle = Callable[[LayerNode, int], float]  # (node, bits) -> accuracy loss
+
+
+def analytic_acc_loss(node: LayerNode, bits: int) -> float:
+    """Default oracle: UAQ error decays ~2x per extra bit (§II-B clusters at
+    3–5 bits for eps=0.5%); per-layer sensitivity scales it."""
+    return node.sensitivity * (2.0 ** (-(bits - 2)))
+
+
+def dichotomous_bits(node: LayerNode, eps: float, oracle: AccOracle,
+                     lo: int = 2, hi: int = 16) -> int:
+    """Minimal precision meeting Eq. 1, by dichotomous (binary) search —
+    valid because oracle loss is monotone non-increasing in bits."""
+    if oracle(node, hi) > eps:
+        return hi
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if oracle(node, mid) <= eps:
+            hi = mid
+        else:
+            lo = mid + 1
+    return hi
+
+
+# ------------------------------------------------------------ virtual blocks
+@dataclasses.dataclass
+class ChainElem:
+    """Either a single node or a virtual block [entry..join) of parallel
+    branches (branch = list of node ids)."""
+    node: Optional[int] = None
+    block_nodes: Tuple[int, ...] = ()
+    branches: Tuple[Tuple[int, ...], ...] = ()
+
+    @property
+    def is_block(self) -> bool:
+        return bool(self.block_nodes)
+
+    def ids(self) -> Tuple[int, ...]:
+        return self.block_nodes if self.is_block else (self.node,)
+
+
+def _reachable(graph: ModelGraph, src: int) -> set:
+    seen, stack = set(), [src]
+    while stack:
+        u = stack.pop()
+        for w in graph.children(u):
+            if w not in seen:
+                seen.add(w)
+                stack.append(w)
+    return seen
+
+
+def chain_flow(graph: ModelGraph,
+               ids: Optional[Sequence[int]] = None) -> List[ChainElem]:
+    """Cluster parallel layers into virtual blocks (Alg. 1 line 3).
+
+    Assumes series-parallel structure with topologically contiguous ids
+    (true of our CNN/transformer graph builders).
+    """
+    ids = list(ids) if ids is not None else [n.id for n in graph.nodes]
+    elems: List[ChainElem] = []
+    i = 0
+    idset = set(ids)
+    while i < len(ids):
+        u = ids[i]
+        kids = [c for c in graph.children(u) if c in idset]
+        if len(kids) <= 1:
+            elems.append(ChainElem(node=u))
+            i += 1
+            continue
+        # parallel region opens at u: find the join = smallest node reachable
+        # from (or equal to) every child
+        reach = [({k} | _reachable(graph, k)) & idset for k in kids]
+        common = set.intersection(*reach)
+        join = min(common)
+        block_ids = tuple(x for x in ids if u < x < join)
+        # branches: connected chains inside the block starting at each child
+        branches = []
+        for k in kids:
+            if k == join:
+                continue  # skip-edge branch (no layers)
+            br, cur = [], k
+            while cur != join and cur in set(block_ids):
+                br.append(cur)
+                nxt = [c for c in graph.children(cur) if c in idset]
+                cur = nxt[0] if nxt else join
+            branches.append(tuple(br))
+        elems.append(ChainElem(node=u))
+        if block_ids:
+            elems.append(ChainElem(block_nodes=block_ids,
+                                   branches=tuple(branches)))
+        i = ids.index(join)
+    return elems
+
+
+# ---------------------------------------------------------------- optimizer
+@dataclasses.dataclass
+class OfflineResult:
+    decision: PartitionDecision
+    times: StageTimes
+    objective: float
+    candidates: int
+    feasible: bool
+
+
+def _quantize_boundary(graph: ModelGraph, end_set: frozenset, eps: float,
+                       oracle: AccOracle, hi_bits: int = 16) -> Dict[Edge, int]:
+    bits: Dict[Edge, int] = {}
+    for (u, v) in graph.boundary_edges(end_set):
+        if u < 0:
+            continue  # raw input edge: transmitted at fixed input precision
+        bits[(u, v)] = dichotomous_bits(graph.node(u), eps, oracle, hi=hi_bits)
+    return bits
+
+
+def _score(graph, end_set, bits, end_dev, cloud_dev, link, T_max):
+    dec = PartitionDecision(end_set=frozenset(end_set), bits=bits)
+    st = evaluate_partition(graph, dec, end_dev, cloud_dev, link)
+    feasible = (st.T_e + st.T_t + st.T_c <= T_max) and \
+        st.satisfies_parallel_constraint()
+    return dec, st, st.objective(), feasible
+
+
+def _relax_bits(graph, end_set, bits_min, end_dev, cloud_dev, link, T_max,
+                hi_bits=16):
+    """Offline Eq.11 analogue: raising precision above the Eq.1 minimum is
+    free accuracy margin whenever transmission is not the bottleneck."""
+    best = _score(graph, end_set, dict(bits_min), end_dev, cloud_dev, link, T_max)
+    cands = 1
+    if bits_min:
+        for extra in (1, 2, 4, 8):
+            trial = {e: min(hi_bits, b + extra) for e, b in bits_min.items()}
+            cand = _score(graph, end_set, trial, end_dev, cloud_dev, link, T_max)
+            cands += 1
+            # extra precision may only fill *idle* link time: it must not
+            # raise the pipeline ceiling (else Eq.5's B_t is being gamed)
+            if cand[2] < best[2] and cand[3] >= best[3] \
+                    and cand[1].max_stage <= best[1].max_stage * (1 + 1e-9):
+                best = cand
+    return best, cands
+
+
+def coach_offline(graph: ModelGraph, end_dev: DeviceProfile,
+                  cloud_dev: DeviceProfile, link: LinkProfile,
+                  eps: float = 0.005, T_max: float = math.inf,
+                  oracle: AccOracle = analytic_acc_loss,
+                  ratio_grid: int = 8,
+                  min_end_nodes: int = 1) -> OfflineResult:
+    """Algorithm 1 offline component.
+
+    ``min_end_nodes``: COACH's workflow (Fig. 3) requires the end device to
+    produce intermediate data — both for privacy and because the online
+    component's task features F are GAP'd from it — so the degenerate
+    all-cloud partition is excluded by default.
+    """
+    elems = chain_flow(graph)
+    n_cands = 0
+    best: Optional[Tuple] = None
+
+    def consider(end_ids):
+        nonlocal best, n_cands
+        end_set = frozenset(end_ids)
+        if len(end_set) < min_end_nodes:
+            return
+        if not graph.valid_end_set(end_set):
+            return
+        bits_min = _quantize_boundary(graph, end_set, eps, oracle)
+        (dec, st, obj, feas), c = _relax_bits(
+            graph, end_set, bits_min, end_dev, cloud_dev, link, T_max)
+        n_cands += c
+        key = (not feas, obj)
+        if best is None or key < (not best[3], best[2]):
+            best = (dec, st, obj, feas)
+
+    # ---- chain-level cuts (cut after element i; i = -1 => all on cloud)
+    prefix: List[int] = []
+    consider(())
+    for i, e in enumerate(elems):
+        prefix.extend(e.ids())
+        consider(tuple(prefix))
+
+    # ---- recurse into virtual blocks: cut inside the block (Alg.1 l.13-14)
+    prefix = []
+    for e in elems:
+        if e.is_block and e.branches:
+            base = tuple(prefix)  # everything before the block on the end
+            for g in range(1, ratio_grid):
+                r = g / ratio_grid
+                cut_ids = list(base)
+                for br in e.branches:
+                    if not br:
+                        continue
+                    total = sum(graph.node(x).flops for x in br)
+                    acc, take = 0.0, []
+                    for x in br:
+                        if total == 0 or (acc + graph.node(x).flops) / max(total, 1e-12) <= r + 1e-12:
+                            take.append(x)
+                            acc += graph.node(x).flops
+                        else:
+                            break
+                    cut_ids.extend(take)
+                consider(tuple(cut_ids))
+        prefix.extend(e.ids())
+
+    dec, st, obj, feas = best
+    return OfflineResult(decision=dec, times=st, objective=obj,
+                         candidates=n_cands, feasible=feas)
+
+
+# ------------------------------------------------------- brute-force oracle
+def brute_force(graph: ModelGraph, end_dev, cloud_dev, link,
+                eps: float = 0.005, T_max: float = math.inf,
+                oracle: AccOracle = analytic_acc_loss,
+                min_end_nodes: int = 1) -> OfflineResult:
+    """Exponential reference for tests: all downward-closed end sets."""
+    n = len(graph)
+    assert n <= 18, "brute force limited to small graphs"
+    best = None
+    cands = 0
+    for mask in range(1 << n):
+        end_ids = frozenset(i for i in range(n) if mask >> i & 1)
+        if len(end_ids) < min_end_nodes:
+            continue
+        if not graph.valid_end_set(end_ids):
+            continue
+        bits = _quantize_boundary(graph, end_ids, eps, oracle)
+        (dec, st, obj, feas), c = _relax_bits(
+            graph, end_ids, bits, end_dev, cloud_dev, link, T_max)
+        cands += c
+        key = (not feas, obj)
+        if best is None or key < (not best[3], best[2]):
+            best = (dec, st, obj, feas)
+    dec, st, obj, feas = best
+    return OfflineResult(dec, st, obj, cands, feas)

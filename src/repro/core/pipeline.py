@@ -1,0 +1,148 @@
+"""Continuous-task pipeline executor (discrete-event).
+
+Three serial resources — end device, link, cloud — process a stream of
+tasks (Fig. 2).  Per task the stage durations come from the offline
+partition's ``StageTimes``; the online component may override transmission
+bits (adaptive quantization) or skip transmission+cloud entirely (early
+exit).  Intra-task layer parallelism is honoured through the
+``first_tx_offset`` / ``cloud_start_offset`` offsets measured by the
+single-task event simulation, i.e. a task's transmission can begin before
+its end-compute finishes (Fig. 4 virtual-block overlap).
+
+Outputs latency, throughput, and explicit bubble accounting (idle time on
+the link and cloud within the active window) — the quantities COACH is
+designed to minimize.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.costs import LinkProfile
+from repro.core.schedule import StageTimes
+
+
+@dataclasses.dataclass
+class TaskPlan:
+    """Per-task pipeline occupation.
+
+    ``tx_offset``/``cloud_offset`` express intra-task overlap measured by the
+    single-task event simulation (Fig. 4).  None (default) means strictly
+    serial stages: transmission starts after end compute, cloud after the
+    transmission completes."""
+    t_end: float
+    t_tx: float
+    t_cloud: float
+    early_exit: bool = False
+    tx_offset: Optional[float] = None    # end-start -> tx can start
+    cloud_offset: Optional[float] = None  # tx-start  -> cloud can start
+
+
+@dataclasses.dataclass
+class TaskRecord:
+    id: int
+    arrival: float
+    done: float
+    latency: float
+    early_exit: bool
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    tasks: List[TaskRecord]
+    makespan: float
+    end_busy: float
+    link_busy: float
+    cloud_busy: float
+
+    @property
+    def mean_latency(self) -> float:
+        return float(np.mean([t.latency for t in self.tasks]))
+
+    @property
+    def p99_latency(self) -> float:
+        return float(np.percentile([t.latency for t in self.tasks], 99))
+
+    @property
+    def throughput(self) -> float:
+        return len(self.tasks) / self.makespan if self.makespan > 0 else 0.0
+
+    @property
+    def exit_ratio(self) -> float:
+        return float(np.mean([t.early_exit for t in self.tasks]))
+
+    def bubble_fraction(self, stage: str = "cloud") -> float:
+        busy = {"end": self.end_busy, "link": self.link_busy,
+                "cloud": self.cloud_busy}[stage]
+        return 1.0 - busy / self.makespan if self.makespan > 0 else 0.0
+
+
+def plan_from_stage_times(st: StageTimes, early_exit: bool = False,
+                          bits_scale: float = 1.0) -> TaskPlan:
+    """bits_scale rescales transmission time (online quant adjustment)."""
+    if early_exit:
+        return TaskPlan(st.T_e, 0.0, 0.0, True)
+    return TaskPlan(st.T_e, st.T_t * bits_scale, st.T_c,
+                    tx_offset=min(st.first_tx_offset, st.T_e),
+                    cloud_offset=st.cloud_start_offset)
+
+
+def run_pipeline(plans: Sequence[TaskPlan],
+                 arrivals: Optional[Sequence[float]] = None,
+                 arrival_period: float = 0.0,
+                 link: Optional[LinkProfile] = None) -> PipelineResult:
+    """Execute the task stream.  If ``link`` has a bandwidth trace, each
+    task's transmission time is re-integrated at its actual start time
+    (dynamic networks, Fig. 5)."""
+    n = len(plans)
+    if arrivals is None:
+        arrivals = [i * arrival_period for i in range(n)]
+    end_free = link_free = cloud_free = 0.0
+    end_busy = link_busy = cloud_busy = 0.0
+    recs: List[TaskRecord] = []
+    for i, (p, arr) in enumerate(zip(plans, arrivals)):
+        e_start = max(arr, end_free)
+        e_done = e_start + p.t_end
+        end_free = e_done
+        end_busy += p.t_end
+        if p.early_exit:
+            recs.append(TaskRecord(i, arr, e_done, e_done - arr, True))
+            continue
+        tx_ready = e_done if p.tx_offset is None or p.tx_offset >= p.t_end \
+            else e_start + p.tx_offset
+        t_start = max(tx_ready, link_free)
+        t_dur = p.t_tx
+        if link is not None and link.trace is not None and p.t_tx > 0:
+            # re-integrate the same bit volume under the live trace
+            bits = p.t_tx * link.bandwidth_bps
+            t_dur = link.transfer_time(bits, t_start)
+        t_done = t_start + t_dur
+        link_free = t_done
+        link_busy += t_dur
+        c_ready = t_done if p.cloud_offset is None \
+            else max(t_start + p.cloud_offset, tx_ready)
+        c_start = max(c_ready, cloud_free)
+        # cloud cannot finish before all data has arrived
+        c_done = max(c_start + p.t_cloud, t_done)
+        cloud_free = c_done
+        cloud_busy += p.t_cloud
+        recs.append(TaskRecord(i, arr, c_done, c_done - arr, False))
+    makespan = max(r.done for r in recs) - min(r.arrival for r in recs)
+    return PipelineResult(recs, makespan, end_busy, link_busy, cloud_busy)
+
+
+def bandwidth_step_trace(steps: Sequence[tuple]) -> Callable[[float], float]:
+    """[(t_from, mbps), ...] -> bps trace function."""
+    steps = sorted(steps)
+
+    def trace(t: float) -> float:
+        bw = steps[0][1]
+        for (t0, m) in steps:
+            if t >= t0:
+                bw = m
+        return bw * 1e6
+
+    return trace

@@ -1,0 +1,75 @@
+"""Uniform Affine Quantization (UAQ) of intermediate tensors [34] and
+accuracy oracles for the dichotomous precision search (Eq. 1).
+
+``uaq_quantize``/``uaq_dequantize`` are the pure-jnp reference semantics;
+the TPU Pallas kernel in ``repro.kernels.uaq`` implements the same math
+(validated against these in tests).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def uaq_params(x: jnp.ndarray, bits: int, axis=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor (axis=None) or per-axis scale/zero-point."""
+    qmax = (1 << bits) - 1
+    if axis is None:
+        lo = jnp.min(x)
+        hi = jnp.max(x)
+    else:
+        red = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+        lo = jnp.min(x, axis=red, keepdims=True)
+        hi = jnp.max(x, axis=red, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-8) / qmax
+    zp = jnp.round(-lo / scale)
+    return scale.astype(jnp.float32), zp.astype(jnp.float32)
+
+
+def uaq_quantize(x, bits: int, axis=None):
+    scale, zp = uaq_params(x, bits, axis)
+    qmax = (1 << bits) - 1
+    q = jnp.clip(jnp.round(x / scale + zp), 0, qmax)
+    return q.astype(jnp.uint8 if bits <= 8 else jnp.uint16), scale, zp
+
+
+def uaq_dequantize(q, scale, zp):
+    return (q.astype(jnp.float32) - zp) * scale
+
+
+def uaq_roundtrip(x, bits: int, axis=None):
+    q, s, z = uaq_quantize(x, bits, axis)
+    return uaq_dequantize(q, s, z).astype(x.dtype)
+
+
+def quant_error(x, bits: int) -> float:
+    """Relative L2 error of the UAQ roundtrip."""
+    y = uaq_roundtrip(x, bits)
+    return float(jnp.linalg.norm((x - y).ravel()) /
+                 (jnp.linalg.norm(x.ravel()) + 1e-12))
+
+
+# ------------------------------------------------------- measured oracle
+def measured_acc_oracle(apply_tail: Callable, calib_inputs, calib_labels,
+                        base_acc: float) -> Callable[[int], float]:
+    """Accuracy-loss oracle measured on a calibration set: quantize the
+    intermediate activation, run the remaining model (``apply_tail``), and
+    compare top-1 accuracy against ``base_acc``.  Used with small real
+    models in examples/tests; big configs use the analytic proxy."""
+
+    def loss(bits: int) -> float:
+        xq = uaq_roundtrip(calib_inputs, bits)
+        logits = apply_tail(xq)
+        acc = float(jnp.mean(jnp.argmax(logits, -1) == calib_labels))
+        return max(0.0, base_acc - acc)
+
+    return loss
+
+
+def packed_bytes(n_elems: int, bits: int) -> int:
+    """Wire bytes for n_elems UAQ values plus per-tensor scale/zp."""
+    return (n_elems * bits + 7) // 8 + 8

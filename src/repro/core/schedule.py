@@ -1,0 +1,162 @@
+"""Single-task stage-time evaluation (grounds Eq. 2–5 in an executable
+event semantics).
+
+Given a partition (end set + per-boundary-edge quant bits), simulate one
+task through: serial end-device execution -> FIFO link transfers (each
+boundary tensor becomes transmissible when its producer finishes) -> serial
+cloud execution gated on received tensors.  From the resulting timeline we
+extract the paper's quantities:
+
+  T_e, T_t, T_c        stage busy times (Eq. 2)
+  T_t_par              transmission overlapped with end compute   (Fig. 4)
+  T_c_par              cloud compute overlapped with transmission (Fig. 4)
+  B_c, B_t             bubble functions (Eq. 5)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Tuple
+
+from repro.core.costs import DeviceProfile, LinkProfile, ModelGraph
+
+Edge = Tuple[int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionDecision:
+    end_set: FrozenSet[int]
+    bits: Dict[Edge, int]  # quantization precision per boundary edge
+    name: str = "coach"
+
+    def boundary_bits_total(self, graph: ModelGraph) -> float:
+        total = 0.0
+        for (u, v), b in self.bits.items():
+            elems = graph.node(v).out_elems if u < 0 else graph.node(u).out_elems
+            total += elems * b
+        return total
+
+
+@dataclasses.dataclass
+class StageTimes:
+    T_e: float
+    T_t: float
+    T_c: float
+    T_t_par: float
+    T_c_par: float
+    latency: float           # single-task end-to-end
+    first_tx_offset: float   # end-start -> first boundary tensor ready
+    cloud_start_offset: float  # first tx start -> cloud can begin
+
+    @property
+    def B_c(self) -> float:
+        return abs(self.T_e - self.T_c)
+
+    @property
+    def B_t(self) -> float:
+        m = max(self.T_e, self.T_t - self.T_t_par, self.T_c - self.T_c_par)
+        return abs(self.T_t - m)
+
+    @property
+    def max_stage(self) -> float:
+        return max(self.T_e, self.T_t, self.T_c)
+
+    def objective(self) -> float:
+        """Eq. 6: B_c + B_t + max{T_e, T_t, T_c}."""
+        return self.B_c + self.B_t + self.max_stage
+
+    def satisfies_parallel_constraint(self) -> bool:
+        """Eq. 4 (tolerance for float noise)."""
+        return self.T_t_par + self.T_c_par <= self.max_stage * (1 + 1e-9)
+
+
+def _overlap(intervals_a: List[Tuple[float, float]],
+             intervals_b: List[Tuple[float, float]]) -> float:
+    tot, j = 0.0, 0
+    for (a0, a1) in intervals_a:
+        for (b0, b1) in intervals_b:
+            lo, hi = max(a0, b0), min(a1, b1)
+            if hi > lo:
+                tot += hi - lo
+    return tot
+
+
+def evaluate_partition(graph: ModelGraph, decision: PartitionDecision,
+                       end_dev: DeviceProfile, cloud_dev: DeviceProfile,
+                       link: LinkProfile,
+                       input_bits_per_elem: int = 8) -> StageTimes:
+    end_set = decision.end_set
+    assert graph.valid_end_set(end_set), "end set not downward-closed"
+
+    # ---------------- end device: serial, topological (id) order ----------
+    t = 0.0
+    end_done: Dict[int, float] = {}
+    end_intervals: List[Tuple[float, float]] = []
+    for n in graph.nodes:
+        if n.id in end_set:
+            dt = end_dev.layer_time(n.flops, n.util)
+            end_intervals.append((t, t + dt))
+            t += dt
+            end_done[n.id] = t
+    T_e = t
+
+    # ---------------- link: FIFO over boundary tensors --------------------
+    edges = graph.boundary_edges(end_set)
+    ready: List[Tuple[float, Edge, float]] = []
+    for (u, v) in edges:
+        when = 0.0 if u < 0 else end_done[u]
+        if u < 0:
+            # raw task input (uint8 image / token ids)
+            bits = graph.input_elems * input_bits_per_elem
+        else:
+            bits = graph.node(u).out_elems * decision.bits.get((u, v), 32)
+        ready.append((when, (u, v), bits))
+    ready.sort(key=lambda r: (r[0], r[1]))
+
+    link_free = 0.0
+    recv: Dict[int, float] = {}
+    link_intervals: List[Tuple[float, float]] = []
+    T_t = 0.0
+    first_tx_start = None
+    for (when, (u, v), bits) in ready:
+        start = max(when, link_free)
+        dur = link.transfer_time(bits, start)
+        link_intervals.append((start, start + dur))
+        if first_tx_start is None:
+            first_tx_start = start
+        link_free = start + dur
+        T_t += dur
+        recv[u] = link_free  # tensor u (or input -1) fully received
+
+    # ---------------- cloud: serial, id order, gated on deps --------------
+    t = 0.0
+    cloud_done: Dict[int, float] = {}
+    cloud_intervals: List[Tuple[float, float]] = []
+    T_c = 0.0
+    for n in graph.nodes:
+        if n.id in end_set:
+            continue
+        ready_at = 0.0
+        for d in n.deps:
+            ready_at = max(ready_at,
+                           recv[d] if d in end_set else cloud_done[d])
+        if not n.deps:
+            ready_at = recv.get(-1, 0.0)
+        dt = cloud_dev.layer_time(n.flops, n.util)
+        start = max(t, ready_at)
+        cloud_intervals.append((start, start + dt))
+        t = start + dt
+        cloud_done[n.id] = t
+        T_c += dt
+
+    finish = max([T_e] + list(cloud_done.values()) + [link_free])
+    T_t_par = _overlap(link_intervals, end_intervals)
+    T_c_par = _overlap(cloud_intervals, link_intervals)
+    first_tx = first_tx_start if first_tx_start is not None else T_e
+    cloud_first = min((s for s, _ in cloud_intervals), default=first_tx)
+    return StageTimes(
+        T_e=T_e, T_t=T_t, T_c=T_c, T_t_par=T_t_par, T_c_par=T_c_par,
+        latency=finish,
+        first_tx_offset=first_tx,
+        cloud_start_offset=max(0.0, cloud_first - first_tx),
+    )

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticLM, CorrelatedTaskStream,
+                                 make_calibration_set)

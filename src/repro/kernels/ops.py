@@ -1,0 +1,56 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``quantize_activation`` / ``dequantize_activation`` handle arbitrary-rank
+boundary tensors (flattened to (tokens, channels)), and fall back to the
+pure-jnp reference for bit-widths outside the packed wire formats (the cost
+model still prices those; only 4/8-bit have a TPU wire kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.uaq import uaq_dequantize, uaq_quantize
+from repro.kernels.semantic_cache import semantic_probe
+
+KERNEL_BITS = (4, 8)
+
+
+def _as2d(x):
+    return x.reshape(-1, x.shape[-1]), x.shape
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "use_kernel"))
+def quantize_activation(x, bits: int = 8, use_kernel: bool = True):
+    """(..., N) -> (packed (..., N*bits//8) uint8, scale, zp)."""
+    x2, shape = _as2d(x)
+    if use_kernel and bits in KERNEL_BITS:
+        p, s, z = uaq_quantize(x2, bits)
+    else:
+        p, s, z = ref.uaq_quantize_ref(x2, bits)
+    lead = shape[:-1]
+    return (p.reshape(*lead, -1), s.reshape(*lead, 1), z.reshape(*lead, 1))
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "out_dtype", "use_kernel"))
+def dequantize_activation(packed, scale, zp, bits: int = 8,
+                          out_dtype=jnp.float32, use_kernel: bool = True):
+    p2, shape = _as2d(packed)
+    s2 = scale.reshape(-1, 1)
+    z2 = zp.reshape(-1, 1)
+    if use_kernel and bits in KERNEL_BITS:
+        x = uaq_dequantize(p2, s2, z2, bits, out_dtype)
+    else:
+        x = ref.uaq_dequantize_ref(p2, s2, z2, bits, out_dtype)
+    return x.reshape(*shape[:-1], -1)
+
+
+@jax.jit
+def probe_cache(x, centers) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused GAP+cosine+separability.  x: (B,S,D); centers: (L,D)."""
+    return semantic_probe(x, centers)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every kernel in this package is validated against these references across
+shape/dtype/bit sweeps in tests/test_kernels.py (interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- UAQ ref
+def uaq_rowwise_ref(x: jnp.ndarray, bits: int):
+    """Row-wise UAQ: x (M, N) -> (q (M,N) uint8, scale (M,1), zp (M,1)).
+
+    q in [0, 2^bits - 1]; scale/zp per row (the boundary-tensor layout used
+    by the collaborative executor: rows = tokens, cols = channels)."""
+    qmax = (1 << bits) - 1
+    xf = x.astype(jnp.float32)  # contract: all quant math in f32
+    lo = jnp.min(xf, axis=1, keepdims=True)
+    hi = jnp.max(xf, axis=1, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-8) / qmax
+    zp = jnp.round(-lo / scale)
+    q = jnp.clip(jnp.round(xf / scale + zp), 0, qmax)
+    return q.astype(jnp.uint8), scale, zp
+
+
+def pack4_ref(q: jnp.ndarray) -> jnp.ndarray:
+    """Pack uint4 values (M, N even) -> (M, N//2) bytes, little-nibble first."""
+    lo = q[:, 0::2].astype(jnp.uint8)
+    hi = q[:, 1::2].astype(jnp.uint8)
+    return lo | (hi << 4)
+
+
+def unpack4_ref(p: jnp.ndarray) -> jnp.ndarray:
+    lo = p & 0xF
+    hi = p >> 4
+    return jnp.stack([lo, hi], axis=-1).reshape(p.shape[0], -1)
+
+
+def uaq_quantize_ref(x, bits: int):
+    q, scale, zp = uaq_rowwise_ref(x, bits)
+    if bits == 4:
+        return pack4_ref(q), scale, zp
+    return q, scale, zp
+
+
+def uaq_dequantize_ref(packed, scale, zp, bits: int, out_dtype=jnp.float32):
+    q = unpack4_ref(packed) if bits == 4 else packed
+    return ((q.astype(jnp.float32) - zp) * scale).astype(out_dtype)
+
+
+# ------------------------------------------------------- semantic cache ref
+def semantic_probe_ref(x: jnp.ndarray, centers: jnp.ndarray):
+    """Fused GAP + cosine similarity + top-2 separability (Eq. 8-10).
+
+    x: (B, S, D) intermediate activations; centers: (L, D) label semantic
+    centers.  Returns (sep (B,), best (B,) int32, sims (B, L) in [0,1]).
+    """
+    f = jnp.mean(x.astype(jnp.float32), axis=1)  # GAP over sequence
+    fn = f / jnp.maximum(jnp.linalg.norm(f, axis=1, keepdims=True), 1e-12)
+    cn = centers.astype(jnp.float32)
+    cn = cn / jnp.maximum(jnp.linalg.norm(cn, axis=1, keepdims=True), 1e-12)
+    sims = (fn @ cn.T + 1.0) * 0.5  # Eq. 8, mapped to [0,1]
+    t_h = jnp.max(sims, axis=1)
+    best = jnp.argmax(sims, axis=1).astype(jnp.int32)
+    masked = jnp.where(
+        jax_one_hot(best, sims.shape[1], dtype=bool), -jnp.inf, sims)
+    t_sh = jnp.max(masked, axis=1)
+    norm = jnp.linalg.norm(sims, axis=1)
+    sep = norm * (t_h - t_sh) * t_h / jnp.maximum(t_sh, 1e-12)  # Eq. 9
+    return sep, best, sims
+
+
+def jax_one_hot(idx, n, dtype=bool):
+    return (idx[:, None] == jnp.arange(n)[None, :]).astype(dtype)

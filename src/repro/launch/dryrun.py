@@ -1,0 +1,192 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, and record memory/cost/collective analysis.
+
+MUST be run as a module entry point (``python -m repro.launch.dryrun``):
+the XLA host-device override below has to execute before jax initializes.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+
+# --- MUST be first, before ANY other import (jax locks device count) -------
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+    + " " + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")).strip()
+# ---------------------------------------------------------------------------
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_supported
+from repro.launch import hlo_analysis as H
+from repro.launch import hlo_cost as HC
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (activation_specs, batch_spec, shard_cache,
+                                   shard_params)
+from repro.models.shardctx import activation_sharding
+from repro.training.optim import AdamWConfig
+
+
+def lower_pair(arch: str, shape_name: str, multi_pod: bool,
+               dtype=jnp.bfloat16):
+    """Returns (lowered, compiled, report dict)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_supported(cfg, shape)
+    if not ok:
+        return None, None, {"arch": arch, "shape": shape_name,
+                            "skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    aparams = ST.abstract_params(cfg, dtype)
+    # serving steps use the model-parallel-only weight layout when the model
+    # fits (avoids per-step FSDP all-gathers; §Perf pairs 1-2)
+    from repro.launch.sharding import serving_layout_fits
+    serving = shape.kind != "train" and serving_layout_fits(aparams, mesh) \
+        and os.environ.get("REPRO_SERVING_LAYOUT", "1") == "1"
+    pshard = shard_params(aparams, mesh, cfg, serving=serving)
+    specs = ST.input_specs(cfg, shape, dtype)
+    repl = NamedSharding(mesh, P())
+    aspecs = activation_specs(cfg, mesh, shape.global_batch)
+
+    t0 = time.time()
+    import contextlib
+    ctx = contextlib.ExitStack()
+    ctx.enter_context(mesh)
+    ctx.enter_context(activation_sharding(aspecs))
+    if shape.kind == "train":
+        # bf16 moments for the >100B configs (HBM budget), f32 otherwise
+        big = H._active_params(cfg) > 2e10 or cfg.num_experts > 0
+        opt_cfg = AdamWConfig(
+            state_dtype=jnp.bfloat16 if big else jnp.float32,
+            compute_dtype=jnp.bfloat16 if big else jnp.float32)
+        aopt = ST.abstract_opt_state(aparams, opt_cfg)
+        # moments share the param tree structure => inherit param shardings
+        oshard = shard_params(aopt.m, mesh, cfg)
+        opt_shard = type(aopt)(step=repl, m=oshard, v=oshard)
+        bshard = {k: NamedSharding(mesh, batch_spec(mesh, shape.global_batch,
+                                                    v.ndim - 1))
+                  for k, v in specs.items()}
+        fn = ST.make_train_step(cfg, opt_cfg,
+                                microbatches=int(os.environ.get(
+                                    "REPRO_MICROBATCHES", "4")))
+        jfn = jax.jit(fn, in_shardings=(pshard, opt_shard, bshard),
+                      out_shardings=(pshard, opt_shard, repl, repl),
+                      donate_argnums=(0, 1))
+        lowered = jfn.lower(aparams, aopt, specs)
+    elif shape.kind == "prefill":
+        fn = ST.make_prefill_step(
+            cfg, max_seq=shape.seq_len,
+            batch_chunks=int(os.environ.get("REPRO_PREFILL_CHUNKS", "1")))
+        bshard = {"inputs": NamedSharding(
+            mesh, batch_spec(mesh, shape.global_batch,
+                             specs["inputs"].ndim - 1))}
+        jfn = jax.jit(fn, in_shardings=(pshard, bshard["inputs"]))
+        lowered = jfn.lower(aparams, specs["inputs"])
+    else:  # decode
+        acache = ST.abstract_cache(cfg, shape.global_batch, shape.seq_len,
+                                   dtype)
+        cshard = shard_cache(acache, mesh, cfg, shape.global_batch)
+        xshard = NamedSharding(
+            mesh, batch_spec(mesh, shape.global_batch,
+                             specs["inputs"].ndim - 1))
+        fn = ST.make_serve_step(cfg)
+        jfn = jax.jit(fn, in_shardings=(pshard, cshard, xshard, repl),
+                      out_shardings=(NamedSharding(mesh, P()), cshard),
+                      donate_argnums=(1,))
+        lowered = jfn.lower(aparams, acache, specs["inputs"], specs["pos"])
+    ctx.close()
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    hlo = compiled.as_text()
+    # trip-count-aware analysis (XLA's cost_analysis counts while-loop
+    # bodies once; see launch.hlo_cost)
+    hc = HC.analyze(hlo)
+    roof = H.Roofline(flops=hc.flops, hbm_bytes=hc.hbm_bytes,
+                      coll_bytes=hc.coll_bytes)
+    xla_cost = compiled.cost_analysis()
+    if isinstance(xla_cost, list):
+        xla_cost = xla_cost[0]
+    coll = H.collective_bytes(hlo)
+    mem = H.memory_stats(compiled)
+    model_fl = H.model_flops_estimate(cfg, shape)
+    n_dev = mesh.devices.size
+    report = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "cost": {"flops_per_dev": roof.flops,
+                 "hbm_bytes_per_dev": roof.hbm_bytes,
+                 "xla_flops_raw": float(xla_cost.get("flops", 0.0)),
+                 "xla_bytes_raw": float(xla_cost.get("bytes accessed", 0.0))},
+        "collectives": coll,
+        "roofline": roof.as_dict(),
+        "model_flops_total": model_fl,
+        "model_flops_per_dev": model_fl / n_dev,
+        "useful_flop_frac": (model_fl / n_dev) / roof.flops if roof.flops else None,
+    }
+    return lowered, compiled, report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    pairs = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    failures = 0
+    for (a, s) in pairs:
+        tag = f"{a}_{s}_{'multi' if args.multi_pod else 'single'}"
+        try:
+            _, compiled, rep = lower_pair(a, s, args.multi_pod)
+            if compiled is not None:
+                print(f"[dryrun] {tag}: compile_s={rep['compile_s']} "
+                      f"bottleneck={rep['roofline']['bottleneck']} "
+                      f"mem={rep['memory'].get('total_nonalias_bytes', 0)/1e9:.2f}GB/dev")
+                print(compiled.memory_analysis())
+                ca = compiled.cost_analysis()
+                print({k: ca[k] for k in sorted(ca)[:8]} if hasattr(ca, 'keys') else ca)
+            else:
+                print(f"[dryrun] {tag}: SKIP ({rep['skipped']})")
+        except Exception as e:
+            failures += 1
+            rep = {"arch": a, "shape": s, "error": repr(e),
+                   "traceback": traceback.format_exc()}
+            print(f"[dryrun] {tag}: FAIL {e!r}")
+        (outdir / f"{tag}.json").write_text(json.dumps(rep, indent=2))
+    if failures:
+        raise SystemExit(f"{failures} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Post-SPMD HLO analysis: collective byte accounting + roofline terms.
+
+``cost_analysis()`` gives HLO FLOPs and bytes but not collective traffic,
+so we parse the compiled module text and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+Shapes in post-partitioning HLO are per-device, so the resulting bytes are
+per-chip — matching the per-chip link bandwidth in the roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW_PER_LINK = 50e9  # ~50 GB/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    if dtype not in _DTYPE_BYTES:
+        return 0.0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes per collective kind (per device)."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        kind = None
+        for c in _COLLECTIVES:
+            # match op name, including -start variants; skip -done (would
+            # double count) and any fused-computation mentions
+            if f" {c}(" in line or f" {c}-start(" in line:
+                kind = c
+                break
+        if kind is None:
+            continue
+        # operand types appear inline inside the op's parens
+        after = line.split(f" {kind}", 1)[1]
+        shapes = _SHAPE_RE.findall(after)
+        if not shapes:  # fall back to the def (output) shape
+            head = line.split("=", 1)[0] + "=" + line.split("=", 1)[1]
+            shapes = _SHAPE_RE.findall(line.split("=", 1)[1].split(kind)[0])
+        out[kind] += sum(_shape_bytes(d, s) for d, s in shapes)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    ici_links: int = 4  # per-chip usable ICI links in a 2D torus
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (ICI_BW_PER_LINK * self.ici_links)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def roofline_from_compiled(compiled, hlo_text: Optional[str] = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)["total"]
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=coll)
+
+
+def memory_stats(compiled) -> Dict[str, float]:
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = float(v)
+    if out:
+        out["total_nonalias_bytes"] = (
+            out.get("argument_size_in_bytes", 0.0)
+            + out.get("output_size_in_bytes", 0.0)
+            + out.get("temp_size_in_bytes", 0.0)
+            - out.get("alias_size_in_bytes", 0.0))
+    return out
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N_active·D for training, 2·N_active·D for inference
+    (per the roofline 'useful compute' convention)."""
+    from repro.core.costs import transformer_graph
+    n_active = _active_params(cfg)
+    toks = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n_active * toks
+
+
+def _active_params(cfg) -> float:
+    """Parameter count touched per token (MoE counts top-k + shared)."""
+    d, f = cfg.d_model, cfg.d_ff
+    total = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    for i in range(cfg.num_layers):
+        spec = cfg.pattern[i % len(cfg.pattern)]
+        if spec.mixer == "attn":
+            total += d * cfg.head_dim * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+        else:
+            di, n, h = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+            total += d * (2 * di + 2 * n + h) + di * d
+        if f:
+            k = cfg.experts_per_token if spec.moe else 1
+            total += 3 * d * f * k
+            if spec.moe and cfg.shared_expert:
+                total += 3 * d * f
+    return float(total)

@@ -1,0 +1,37 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax initialization).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 v5e chips) or 2x16x16 multi-pod (512 chips).
+
+    REPRO_MESH_SHAPE (e.g. "4,8" or "2,4,4") overrides the chip counts for
+    fast debugging iterations; axis names follow the entry count.
+    """
+    env = os.environ.get("REPRO_MESH_SHAPE")
+    if env:
+        shape = tuple(int(x) for x in env.split(","))
+        axes = ("pod", "data", "model")[-len(shape):]
+        return jax.make_mesh(shape, axes)
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for CPU smoke tests and examples."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Axes the global batch is sharded over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,101 @@
+"""Serving launcher: batched prefill + decode with the COACH collaborative
+split (end pod / cloud pod) and the online scheduler in the loop.
+
+  python -m repro.launch.serve --arch gemma2-2b --smoke --requests 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.core.collab import CollabRuntime
+from repro.core.costs import (A6000_SERVER, JETSON_NX, WIFI_5GHZ,
+                              transformer_graph)
+from repro.core.partitioner import coach_offline
+from repro.data.pipeline import CorrelatedTaskStream, make_calibration_set
+from repro.models import model as M
+from repro.serving.engine import CoachEngine, EngineConfig
+
+
+def serve(arch: str, *, smoke: bool = True, requests: int = 200,
+          bandwidth_mbps: float = 50.0, correlation: str = "medium",
+          seed: int = 0, verbose: bool = True):
+    cfg = get_config(arch)
+    if smoke:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(cfg, key)
+
+    # ---- offline component: partition + precision on the cost graph
+    graph = transformer_graph(cfg, batch=1, seq=128)
+    link = WIFI_5GHZ(bandwidth_mbps)
+    off = coach_offline(graph, JETSON_NX, A6000_SERVER, link)
+    # map the layer cut to a group boundary (embed node is id 0)
+    n_end_layers = sum(1 for i in off.decision.end_set
+                       if 0 < i <= cfg.num_layers)
+    cut_group = min(max(1, round(n_end_layers / cfg.group_size)),
+                    cfg.num_groups - 1)
+    rt = CollabRuntime(cfg, params, cut_group)
+
+    # ---- online component: semantic cache fed by real boundary features
+    stream = CorrelatedTaskStream(n_labels=16, dim=cfg.d_model,
+                                  correlation=correlation, seed=seed)
+    feats, labels = make_calibration_set(stream, n=300)
+    engine = CoachEngine(rt, off.times, JETSON_NX, link, A6000_SERVER,
+                         n_labels=16, calib_feats=feats, calib_labels=labels,
+                         boundary_elems=128 * cfg.d_model)
+
+    def classify(task):
+        # run the real end segment on the task; its quantized boundary goes
+        # to the cloud segment; the semantic cache is keyed on the frontend
+        # features (GAP of the modality encoder output)
+        if cfg.embed_inputs:
+            inp = jnp.asarray(np.tile(task.features[None, None, :],
+                                      (1, 8, 1)), jnp.float32)
+        else:
+            toks = (np.abs((task.features[:8] * 1000).astype(np.int64))
+                    % cfg.vocab_size).astype(np.int32)
+            inp = jnp.asarray(toks)[None]
+        pkt, _h = rt.end_step(inp)
+        logits = rt.cloud_step(pkt)
+        return task.features, int(np.argmax(logits[0]) % stream.n_labels)
+
+    tasks = stream.tasks(requests)
+    t0 = time.time()
+    stats = engine.run_stream(tasks, arrival_period=off.times.max_stage,
+                              classify=classify)
+    wall = time.time() - t0
+    if verbose:
+        pr = stats.pipeline
+        print(f"arch={cfg.name} cut_group={cut_group}/{cfg.num_groups} "
+              f"bits(offline)={sorted(set(off.decision.bits.values()))}")
+        print(f"requests={requests} exit_ratio={stats.exit_ratio:.2%} "
+              f"mean_bits={stats.mean_bits:.1f} "
+              f"wire_kb/task={stats.wire_kb_per_task:.1f}")
+        print(f"latency mean={pr.mean_latency*1e3:.2f}ms p99="
+              f"{pr.p99_latency*1e3:.2f}ms thpt={pr.throughput:.1f} it/s "
+              f"cloud_bubbles={pr.bubble_fraction('cloud'):.2%} "
+              f"(wall {wall:.1f}s)")
+    return stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="gemma2-2b")
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--bandwidth", type=float, default=50.0)
+    ap.add_argument("--correlation", choices=("low", "medium", "high"),
+                    default="medium")
+    args = ap.parse_args()
+    serve(args.arch, requests=args.requests,
+          bandwidth_mbps=args.bandwidth, correlation=args.correlation)
+
+
+if __name__ == "__main__":
+    main()

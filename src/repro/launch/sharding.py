@@ -1,0 +1,190 @@
+"""Parameter / activation / cache sharding rules for the production mesh.
+
+Strategy (recorded in EXPERIMENTS.md §Perf as the paper-faithful baseline):
+
+  - every >=2D weight is FSDP-sharded: dim_a over the data axes, dim_b over
+    the model axis (when divisible) — this is what keeps the 398B Jamba
+    within a v5e's HBM including optimizer moments;
+  - MoE expert stacks (E, D, F) shard D over data, F over model;
+  - 1D scales shard over model when divisible;
+  - the leading scan-group stack dim is always replicated;
+  - batch shards over ("pod","data"); decode KV caches shard the *sequence*
+    axis over "model" (kv-head counts don't divide 16) and batch over data.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([_axis_size(mesh, n) for n in name]))
+    return mesh.shape[name]
+
+
+def _fit(dim: int, mesh: Mesh, axis) -> Optional[Any]:
+    """axis if it divides dim else None."""
+    if axis == () or axis is None:
+        return None
+    return axis if dim % _axis_size(mesh, axis) == 0 else None
+
+
+# row-parallel matrices: contraction (input) dim is the one the activations
+# arrive sharded on (model axis); output dim joins the data/FSDP axis.
+_ROW_PARALLEL = ("w_down", "wo", "out_proj")
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               n_groups: int, serving: bool = False) -> P:
+    """PartitionSpec for one parameter leaf (path = '/'-joined keys).
+
+    Column-parallel (default): (in, out) -> (data, model), activations leave
+    sharded on the model axis.  Row-parallel (w_down/wo/out_proj): (in, out)
+    -> (model, data), consuming model-sharded activations with a psum.
+    Both orientations FSDP-shard the other dim over data for HBM.
+
+    ``serving=True`` drops the data-axis (FSDP) shardings: decode/prefill
+    steps otherwise all-gather every weight once per step, which made small-
+    model decode collective-bound (§Perf pair 2) — tensor-parallel over
+    "model" only, weights replicated across data, is the serving layout
+    whenever the model fits (params/16 within the HBM budget).
+    """
+    data = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if serving:
+        data = ()
+    stacked = shape[:1] == (n_groups,) and "groups" in path
+    core = shape[1:] if stacked else shape
+    lead = (None,) if stacked else ()
+    row = any(path.endswith(r) for r in _ROW_PARALLEL)
+
+    def spec(*parts):
+        return P(*lead, *parts)
+
+    if len(core) == 3:  # MoE expert stacks
+        if row:  # w_down (E, F, D)
+            return spec(None, _fit(core[1], mesh, "model"),
+                        _fit(core[2], mesh, data))
+        return spec(None, _fit(core[1], mesh, data),
+                    _fit(core[2], mesh, "model"))
+    if len(core) == 2:
+        if row or path.endswith("embed"):
+            # embed (V, D): V over model so tied-head logits come out
+            # model-sharded, matching the "logits" activation constraint
+            a = _fit(core[0], mesh, "model")
+            b = _fit(core[1], mesh, data)
+            return spec(a, b)
+        a = _fit(core[0], mesh, data)
+        b = _fit(core[1], mesh, "model")
+        if a is None and b is None:
+            a = _fit(core[0], mesh, "model")
+            b = _fit(core[1], mesh, data) if a is not None else None
+        return spec(a, b)
+    if len(core) == 1:
+        return spec(_fit(core[0], mesh, "model"))
+    return spec(*([None] * len(core)))
+
+
+def shard_params(params, mesh: Mesh, cfg: ModelConfig,
+                 serving: bool = False):
+    """NamedShardings pytree matching ``params`` structure."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        specs.append(NamedSharding(
+            mesh, param_spec(pstr, leaf.shape, mesh, cfg.num_groups,
+                             serving=serving)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def serving_layout_fits(params, mesh: Mesh, budget_bytes: float = 8e9) -> bool:
+    """True if model-parallel-only weights fit the per-chip budget."""
+    total = sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(params))
+    return total / _axis_size(mesh, "model") <= budget_bytes
+
+
+# ------------------------------------------------------------- activations
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    data = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    ax = data if batch % _axis_size(mesh, data) == 0 else (
+        "data" if batch % _axis_size(mesh, "data") == 0 else None)
+    return P(ax, *([None] * extra_dims))
+
+
+def cache_spec(mesh: Mesh, cfg: ModelConfig, batch: int, leaf_shape) -> P:
+    """Decode-cache leaf shardings.  Leaves (leading group dim G):
+       attn k/v  (G, B, L, KV, hd) -> batch over data, seq L over model
+       attn pos  (G, L)
+       ssm state (G, B, H, P, N)   -> batch over data, heads over model
+       ssm conv  (G, B, K-1, Dc)   -> batch over data, Dc over model
+    """
+    data = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    nd = len(leaf_shape)
+    if nd == 5 and leaf_shape[3] == cfg.num_kv_heads \
+            and leaf_shape[4] == cfg.head_dim:  # kv cache
+        b_ax = _fit(leaf_shape[1], mesh, data) or _fit(leaf_shape[1], mesh, "data")
+        s_ax = _fit(leaf_shape[2], mesh, "model")
+        if b_ax is None:  # batch=1 long-context: shard seq over everything
+            s_ax = _fit(leaf_shape[2], mesh, ("data", "model")) or s_ax
+        return P(None, b_ax, s_ax, None, None)
+    if nd == 5:  # ssm state (G,B,H,P,N)
+        b_ax = _fit(leaf_shape[1], mesh, data) or _fit(leaf_shape[1], mesh, "data")
+        return P(None, b_ax, _fit(leaf_shape[2], mesh, "model"), None, None)
+    if nd == 4:  # ssm conv (G,B,K-1,Dc)
+        b_ax = _fit(leaf_shape[1], mesh, data) or _fit(leaf_shape[1], mesh, "data")
+        return P(None, b_ax, None, _fit(leaf_shape[3], mesh, "model"))
+    if nd == 2:  # kv pos (G, L)
+        return P(None, None)
+    return P(*([None] * nd))
+
+
+def shard_cache(cache, mesh: Mesh, cfg: ModelConfig, batch: int):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(
+            mesh, cache_spec(mesh, cfg, batch, leaf.shape)), cache)
+
+
+def activation_specs(cfg: ModelConfig, mesh: Mesh, batch: int,
+                     collab: bool = False):
+    """PartitionSpecs for ``repro.models.shardctx`` constraint points.
+
+    Model-parallel axes only apply when the dimension divides the axis size
+    (e.g. qwen2-vl's 12 heads stay replicated on a 16-way model axis).
+    ``collab=True`` builds specs for inside the pod-manual shard_map of the
+    collaborative pipeline, where "pod" must not appear in auto specs."""
+    data = ("pod", "data") if ("pod" in mesh.axis_names and not collab) \
+        else ("data",)
+    b = data if batch % _axis_size(mesh, data) == 0 else (
+        "data" if batch % _axis_size(mesh, "data") == 0 else None)
+    m = lambda dim: _fit(dim, mesh, "model")
+    hd = cfg.head_dim
+    return {
+        "hidden": P(b, None, None),
+        "q_heads": P(b, None, m(cfg.num_heads), None),
+        "kv_heads": P(b, None, m(cfg.num_kv_heads), None),
+        "attn_out": P(b, None, m(cfg.num_heads * hd)),
+        "ffn": P(b, None, m(cfg.d_ff) if cfg.d_ff else None),
+        "logits": P(b, None, m(cfg.vocab_size)),
+        "ssm_heads": P(b, None, m(cfg.ssm_heads), None) if cfg.ssm_state else None,
+        "ssm_inner": P(b, None, m(cfg.ssm_inner)) if cfg.ssm_state else None,
+        "conv": P(b, None, m(cfg.ssm_inner + 2 * cfg.ssm_state))
+            if cfg.ssm_state else None,
+        # MoE dispatch: token groups over data, expert FFN width over model
+        "moe_oh": P(b, None, None),
+        "moe_buf": P(b, None, None, None),
+        "moe_h": P(b, None, None, m(cfg.d_ff) if cfg.d_ff else None),
+        # intra-chunk SSD tensors: shard the chunk axis over "model"
+        "ssm_chunk_x": P(b, "model", None, None, None),
+        "ssm_chunk_dt": P(b, "model", None, None),
+        "ssm_chunk_bc": P(b, "model", None, None, None),
+        "ssm_chunk_l": P(b, "model", None, None, None),
+        "ssm_chunk_s": P(b, "model", None, None, None),
+    }

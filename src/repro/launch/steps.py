@@ -1,0 +1,127 @@
+"""Step functions (train / prefill / decode) and abstract input specs for
+every (architecture x input shape) pair — shared by the dry-run, the real
+launchers, and the benchmarks.
+
+All specs are ``jax.ShapeDtypeStruct`` stand-ins: weak-type-correct,
+shardable, and never allocated (the 398B configs only ever exist as
+abstract pytrees on this host).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import InputShape
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.training.optim import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    microbatches: int = 1):
+    """One optimizer step.  ``microbatches > 1`` accumulates gradients over
+    K sequential microbatches (lax.scan): activation temp memory scales 1/K
+    while the params/optimizer footprint is unchanged — the lever that fits
+    the MoE giants' train_4k on a 16GB v5e (EXPERIMENTS.md §Perf)."""
+    grad_fn = jax.value_and_grad(M.forward_train, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, cfg, batch)
+        else:
+            K = microbatches
+            mb = jax.tree.map(
+                lambda x: x.reshape((K, x.shape[0] // K) + x.shape[1:]),
+                batch)
+
+            def acc(carry, b):
+                gsum, lsum = carry
+                (loss, mets), g = grad_fn(params, cfg, b)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + loss), mets
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (grads, loss), metrics = jax.lax.scan(
+                acc, (zeros, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / K, grads)
+            loss = loss / K
+            metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+        params, opt_state = adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, loss, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int, batch_chunks: int = 1):
+    """``batch_chunks > 1`` maps the prefill over batch sub-chunks
+    sequentially (lax.map): activation temps scale ~1/chunks while the
+    returned logits/caches are identical — the serving-side analogue of
+    gradient-accumulation (per-chunk batch must still divide the data axes).
+    """
+    def prefill_step(params, inputs):
+        if batch_chunks == 1:
+            return M.prefill(params, cfg, inputs, max_seq)
+        B = inputs.shape[0]
+        assert B % batch_chunks == 0
+        xs = inputs.reshape((batch_chunks, B // batch_chunks)
+                            + inputs.shape[1:])
+        logits, caches = jax.lax.map(
+            lambda x: M.prefill(params, cfg, x, max_seq), xs)
+        merge_l = logits.reshape((B,) + logits.shape[2:])
+        # batched cache leaves are (chunks, G, b, ...) -> (G, B, ...);
+        # batch-free leaves (kv "pos", (chunks, G, L)) are chunk-invariant
+        merge_c = jax.tree.map(
+            lambda t: jnp.moveaxis(t, 0, 1).reshape(
+                (t.shape[1], B) + t.shape[3:]) if t.ndim >= 5 else t[0],
+            caches)
+        return merge_l, merge_c
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, pos):
+        return M.decode_step(params, cfg, cache, tokens, pos)
+    return serve_step
+
+
+# ----------------------------------------------------------------- specs
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype))
+
+
+def abstract_opt_state(aparams, opt_cfg: AdamWConfig):
+    return jax.eval_shape(lambda p: adamw_init(p, opt_cfg), aparams)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                   dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: M.init_cache(cfg, batch, max_seq, dtype=dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Abstract model inputs for one assigned input shape.
+
+    train:   {"tokens"|"embeds", "labels"}
+    prefill: {"inputs"}
+    decode:  {"tokens"|"embeds" (B,1[,D]), "pos"} (+ cache built separately)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    emb = lambda *s: jax.ShapeDtypeStruct(s, dtype)
+    if shape.kind == "train":
+        x = {"embeds": emb(B, S, cfg.d_model)} if cfg.embed_inputs \
+            else {"tokens": tok(B, S)}
+        return {**x, "labels": tok(B, S)}
+    if shape.kind == "prefill":
+        return {"inputs": emb(B, S, cfg.d_model) if cfg.embed_inputs
+                else tok(B, S)}
+    if shape.kind == "decode":
+        x = emb(B, 1, cfg.d_model) if cfg.embed_inputs else tok(B, 1)
+        return {"inputs": x, "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    raise ValueError(shape.kind)

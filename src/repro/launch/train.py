@@ -1,0 +1,94 @@
+"""Training launcher.
+
+CPU-scale real runs (examples) and the production-mesh entry point.
+
+  python -m repro.launch.train --arch gemma2-2b --smoke --steps 50
+  python -m repro.launch.train --arch qwen3-14b --production  # on a pod
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, latest_step, save_checkpoint
+from repro.configs import ARCHS, get_config
+from repro.data.pipeline import SyntheticLM
+from repro.launch import steps as ST
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.sharding import shard_params
+from repro.models import model as M
+from repro.training.optim import AdamWConfig, adamw_init
+
+
+def train(arch: str, *, smoke: bool = True, steps: int = 50,
+          batch: int = 8, seq: int = 256, lr: float = 3e-4,
+          ckpt_dir: str | None = None, ckpt_every: int = 100,
+          microbatches: int = 1, log_every: int = 10, seed: int = 0,
+          production: bool = False):
+    cfg = get_config(arch)
+    if smoke:
+        cfg = cfg.reduced()
+    mesh = make_production_mesh() if production else make_host_mesh()
+    opt_cfg = AdamWConfig(lr=lr, warmup_steps=max(steps // 20, 5),
+                          total_steps=steps)
+
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(cfg, key,
+                           dtype=jnp.bfloat16 if production else jnp.float32)
+    opt = adamw_init(params, opt_cfg)
+    start = 0
+    if ckpt_dir and (s := latest_step(ckpt_dir)) is not None:
+        params = load_checkpoint(ckpt_dir, s, params)
+        start = s
+
+    step_fn = jax.jit(ST.make_train_step(cfg, opt_cfg,
+                                         microbatches=microbatches),
+                      donate_argnums=(0, 1))
+    data = SyntheticLM(cfg.vocab_size, seed=seed)
+    losses = []
+    t0 = time.time()
+    for i in range(start, steps):
+        toks = jnp.asarray(data.batch(batch, seq))
+        if cfg.embed_inputs:
+            emb = jax.random.normal(jax.random.fold_in(key, i),
+                                    (batch, seq, cfg.d_model)) * 0.3
+            b = {"embeds": emb, "labels": toks}
+        else:
+            b = {"tokens": toks, "labels": toks}
+        params, opt, loss, mets = step_fn(params, opt, b)
+        losses.append(float(loss))
+        if (i + 1) % log_every == 0:
+            dt = (time.time() - t0) / log_every
+            print(f"step {i+1:5d} loss {np.mean(losses[-log_every:]):.4f} "
+                  f"({dt*1e3:.0f} ms/step)")
+            t0 = time.time()
+        if ckpt_dir and (i + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, i + 1, params)
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--production", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    train(args.arch, smoke=not args.production, steps=args.steps,
+          batch=args.batch, seq=args.seq, lr=args.lr,
+          microbatches=args.microbatches, ckpt_dir=args.ckpt_dir,
+          production=args.production)
+
+
+if __name__ == "__main__":
+    main()

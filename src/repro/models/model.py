@@ -1,0 +1,259 @@
+"""Unified model: embedding -> scanned layer groups -> norm -> lm head.
+
+The layer stack is executed as ``lax.scan`` over ``cfg.num_groups`` stacked
+parameter groups (each group = one period of ``cfg.pattern``), keeping HLO
+size independent of depth.  Three entry points:
+
+  forward_train(params, cfg, batch)            -> loss, metrics
+  prefill(params, cfg, inputs)                 -> logits_last, cache
+  decode_step(params, cfg, cache, token, pos)  -> logits, cache
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.shardctx import constrain
+
+
+# ------------------------------------------------------------------------ init
+def _init_block(cfg: ModelConfig, spec: LayerSpec, key, dtype):
+    ks = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"norm1": L.init_rmsnorm(cfg.d_model, dtype)}
+    if spec.mixer == "attn":
+        p["attn"] = L.init_attention(cfg, ks[0], dtype)
+    else:
+        p["mamba"] = SSM.init_mamba(cfg, ks[0], dtype)
+    if cfg.d_ff > 0:
+        p["norm2"] = L.init_rmsnorm(cfg.d_model, dtype)
+        if spec.moe:
+            p["moe"] = MOE.init_moe(cfg, ks[1], dtype)
+        else:
+            p["mlp"] = L.init_mlp(cfg.d_model, cfg.d_ff, ks[1], dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    ke, kg, kh = jax.random.split(key, 3)
+    params: Dict[str, Any] = {}
+    if not cfg.embed_inputs:
+        params["embed"] = (jax.random.normal(ke, (cfg.vocab_size, cfg.d_model))
+                           * 0.02).astype(dtype)
+
+    def init_group(gkey):
+        keys = jax.random.split(gkey, cfg.group_size)
+        return tuple(_init_block(cfg, spec, k, dtype)
+                     for spec, k in zip(cfg.pattern, keys))
+
+    gkeys = jax.random.split(kg, cfg.num_groups)
+    params["groups"] = jax.vmap(init_group)(gkeys)
+    params["final_norm"] = L.init_rmsnorm(cfg.d_model, dtype)
+    if cfg.embed_inputs or not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(kh, (cfg.d_model, cfg.vocab_size))
+                             * 0.02).astype(dtype)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# --------------------------------------------------------------------- block fwd
+def _block_full(p, h, cfg: ModelConfig, spec: LayerSpec, positions,
+                want_cache: bool, max_seq: int):
+    """Full-sequence block. Returns (h, cache_or_None, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+    cache = None
+    if spec.mixer == "attn":
+        y, (k, v) = L.attention_full(p["attn"], x, cfg, spec, positions)
+        if want_cache:
+            cache = L.prefill_to_cache(cfg, spec, k, v, max_seq)
+    else:
+        if want_cache:
+            y, cache = SSM.mamba_forward(p["mamba"], x, cfg, return_cache=True)
+        else:
+            y = SSM.mamba_forward(p["mamba"], x, cfg)
+    h = h + y
+    if cfg.d_ff > 0:
+        x = L.rms_norm(h, p["norm2"], cfg.norm_eps)
+        if spec.moe:
+            y, aux = MOE.moe_ffn(p["moe"], x, cfg)
+        else:
+            y = L.mlp(p["mlp"], x, cfg.mlp_act)
+        h = h + y
+    return h, cache, aux
+
+
+def _block_decode(p, h, cache, pos, cfg: ModelConfig, spec: LayerSpec):
+    x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        y, cache = L.attention_decode(p["attn"], x, cache, pos, cfg, spec)
+    else:
+        y, cache = SSM.mamba_decode(p["mamba"], x, cache, cfg)
+    h = h + y
+    if cfg.d_ff > 0:
+        x = L.rms_norm(h, p["norm2"], cfg.norm_eps)
+        if spec.moe:
+            # (B,1,D): each decode token is its own dispatch group, keeping
+            # the batch axis shardable over data
+            y, _ = MOE.moe_ffn(p["moe"], x, cfg)
+        else:
+            y = L.mlp(p["mlp"], x, cfg.mlp_act)
+        h = h + y
+    return h, cache
+
+
+# ------------------------------------------------------------------- embeddings
+def _embed(params, cfg: ModelConfig, inputs):
+    if cfg.embed_inputs:
+        h = inputs  # (B,S,D) precomputed frontend embeddings
+    else:
+        h = jnp.take(params["embed"], inputs, axis=0)
+    if cfg.scale_embeddings:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    return h
+
+
+def _lm_head(params, cfg: ModelConfig, h):
+    if "lm_head" in params:
+        logits = h @ params["lm_head"]
+    else:
+        logits = h @ params["embed"].T
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = (c * jnp.tanh(logits.astype(jnp.float32) / c)).astype(logits.dtype)
+    return constrain(logits, "logits")
+
+
+# ------------------------------------------------------------------ full forward
+def forward(params, cfg: ModelConfig, inputs, *, want_cache: bool = False,
+            max_seq: Optional[int] = None, remat: bool = False):
+    """Returns (logits, cache_groups_or_None, aux_loss)."""
+    B = inputs.shape[0]
+    S = inputs.shape[1]
+    max_seq = max_seq or S
+    h = constrain(_embed(params, cfg, inputs), "hidden")
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    # nested remat: the outer checkpoint makes the group scan O(1)-residual;
+    # the inner per-block checkpoints keep the group-body backward peak at
+    # ~one block's temps (jamba groups span 8 heterogeneous layers)
+    def block(p, h, spec):
+        return _block_full(p, h, cfg, spec, positions, want_cache, max_seq)
+
+    # (nested per-block remat was tried and REGRESSED temp memory 99->141GB
+    # on jamba train_4k — XLA duplicates recompute buffers; see §Perf log)
+
+    def group_body(h, gp):
+        caches, auxs = [], jnp.zeros((), jnp.float32)
+        for i, spec in enumerate(cfg.pattern):
+            h, c, a = block(gp[i], h, spec)
+            h = constrain(h, "hidden")
+            caches.append(c)
+            auxs = auxs + a
+        return h, (tuple(caches), auxs)
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    h, (caches, auxs) = lax.scan(body, h, params["groups"])
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    aux = jnp.sum(auxs)
+    return h, caches, aux
+
+
+# sequence-chunked cross-entropy: full (B,S,V) float32 logits never exist
+# (with 256k vocabs they would dominate per-chip HBM — see EXPERIMENTS.md)
+LOSS_CHUNK = 512
+
+
+def _chunked_xent(params, cfg: ModelConfig, h, labels, mask):
+    """h: (B,S,D); labels/mask: (B,S).  Mean NLL over masked positions."""
+    B, S, D = h.shape
+    C = min(LOSS_CHUNK, S)
+    if S % C:
+        pad = C - S % C
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        S += pad
+    n = S // C
+    hs = jnp.moveaxis(h.reshape(B, n, C, D), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, n, C), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, n, C), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        tot, cnt = carry
+        hc, lc, mc = xs
+        logits = _lm_head(params, cfg, hc).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        tot = tot + jnp.sum(jnp.where(mc, lse - gold, 0.0))
+        cnt = cnt + jnp.sum(mc)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def forward_train(params, cfg: ModelConfig, batch, remat: bool = True):
+    """batch: {"tokens"|"embeds", "labels"}.  Returns (loss, metrics)."""
+    inputs = batch["embeds"] if cfg.embed_inputs else batch["tokens"]
+    labels = batch["labels"]
+    h, _, aux = forward(params, cfg, inputs, remat=remat)
+    if not cfg.embed_inputs:  # next-token LM: shift
+        h, labels = h[:, :-1], labels[:, 1:]
+    mask = jnp.ones(labels.shape, bool)
+    nll = _chunked_xent(params, cfg, h, labels, mask)
+    loss = nll + aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+def prefill(params, cfg: ModelConfig, inputs, max_seq: int):
+    """Returns (last-position logits, cache)."""
+    h, caches, _ = forward(params, cfg, inputs, want_cache=True, max_seq=max_seq)
+    logits = _lm_head(params, cfg, h[:, -1])
+    return logits, caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.float32):
+    """Empty decode cache, structure matching prefill output: a tuple (per
+    pattern position) of arrays stacked over groups."""
+    def one(spec: LayerSpec):
+        if spec.mixer == "attn":
+            c = L.init_kv_cache(cfg, spec, batch, max_seq, dtype)
+        else:
+            c = SSM.init_mamba_cache(cfg, batch, dtype)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.num_groups,) + x.shape), c)
+    return tuple(one(spec) for spec in cfg.pattern)
+
+
+def decode_step(params, cfg: ModelConfig, cache, inputs, pos):
+    """inputs: (B,1) tokens or (B,1,D) embeds; pos: scalar position.
+    Returns (logits (B,V), new cache)."""
+    h = _embed(params, cfg, inputs)
+
+    def group_body(h, xs):
+        gp, gc = xs
+        new = []
+        for i, spec in enumerate(cfg.pattern):
+            h, c = _block_decode(gp[i], h, gc[i], pos, cfg, spec)
+            h = constrain(h, "hidden")
+            new.append(c)
+        return h, tuple(new)
+
+    h, new_cache = lax.scan(group_body, h, (params["groups"], cache))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return _lm_head(params, cfg, h[:, 0]), new_cache

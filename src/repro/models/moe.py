@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN with capacity-based token dispatch.
+
+Dispatch avoids the classic (T, E, C) one-hot blow-up: slots are computed
+with a running per-expert cumsum, tokens are scattered into a
+(G, E, C+1, D) buffer (overflow tokens land in the sacrificial last slot),
+expert FFNs run as one batched einsum over E (active FLOPs only), and
+results are gathered back and gate-combined.
+
+All ops are explicitly G-batched (no vmap) so the launcher's activation
+sharding constraints apply: token groups G shard over the data axes, the
+expert FFN dim F over the model axis — the buffers stay O(tokens/device).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.shardctx import constrain
+
+
+def init_moe(cfg: ModelConfig, key, dtype=jnp.float32):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    s, so = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {
+        "router": (jax.random.normal(k1, (d, e)) * s).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k2, (e, d, f)) * s).astype(dtype),
+        "w_up": (jax.random.normal(k3, (e, d, f)) * s).astype(dtype),
+        "w_down": (jax.random.normal(k4, (e, f, d)) * so).astype(dtype),
+    }
+    if cfg.shared_expert:
+        ks = jax.random.split(k5, 3)
+        p["shared"] = {
+            "w_gate": (jax.random.normal(ks[0], (d, f)) * s).astype(dtype),
+            "w_up": (jax.random.normal(ks[1], (d, f)) * s).astype(dtype),
+            "w_down": (jax.random.normal(ks[2], (f, d)) * so).astype(dtype),
+        }
+    return p
+
+
+def capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(tokens_per_group * cfg.experts_per_token
+                      * cfg.capacity_factor / cfg.num_experts))
+    return max(4, min(c, tokens_per_group * cfg.experts_per_token))
+
+
+def moe_ffn(params, x, cfg: ModelConfig):
+    """x: (G, T, D) token groups.  Returns (y, aux_loss)."""
+    G, T, D = x.shape
+    k, E = cfg.experts_per_token, cfg.num_experts
+    act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+    cap = capacity(T, cfg)
+
+    logits = x.astype(jnp.float32) @ params["router"]  # (G,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, k)  # (G,T,k)
+    gates = gates / jnp.clip(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    gates = gates.astype(x.dtype)
+
+    # Switch-style load-balance auxiliary loss
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(ids, E, dtype=jnp.float32), axis=2), axis=(0, 1))
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce / k)
+
+    # slots: running per-(group, expert) assignment count
+    flat_ids = ids.reshape(G, T * k)
+    oh = constrain(jax.nn.one_hot(flat_ids, E, dtype=jnp.int32), "moe_oh")
+    slot = jnp.cumsum(oh, axis=1) - 1  # (G,Tk,E)
+    slot = jnp.take_along_axis(slot, flat_ids[..., None], axis=2)[..., 0]
+    slot = jnp.where(slot < cap, slot, cap)  # overflow -> sacrificial slot
+
+    gi = jnp.broadcast_to(jnp.arange(G)[:, None], (G, T * k))
+    tok = jnp.broadcast_to(jnp.repeat(jnp.arange(T), k)[None], (G, T * k))
+    # dispatch via an int32 token-index map + gather instead of scattering
+    # the activations directly: JAX upcasts bf16 scatter-adds to f32, which
+    # made the (G,E,C,D) buffers the dominant HBM traffic of MoE prefill
+    # (§Perf pair 3 it4).  Slots are unique per (g,e) so set() semantics
+    # match add(); the sentinel row T gathers zeros.
+    tok_map = jnp.full((G, E, cap + 1), T, jnp.int32)
+    tok_map = tok_map.at[gi, flat_ids, slot].set(tok)
+    x_pad = jnp.concatenate([x, jnp.zeros((G, 1, D), x.dtype)], axis=1)
+    buf = x_pad[jnp.arange(G)[:, None, None], tok_map]  # (G,E,C+1,D) gather
+    buf = constrain(buf, "moe_buf")
+
+    # expert FFN (active FLOPs only: G * E * cap * D * F)
+    h = constrain(jnp.einsum("gecd,edf->gecf", buf, params["w_gate"]), "moe_h")
+    u = constrain(jnp.einsum("gecd,edf->gecf", buf, params["w_up"]), "moe_h")
+    yb = jnp.einsum("gecf,efd->gecd", (act(h) * u).astype(x.dtype),
+                    params["w_down"])
+    yb = constrain(yb.astype(x.dtype), "moe_buf")
+
+    # gather back + gate combine; overflow slot contributes zero via mask
+    out_k = yb[gi, flat_ids, slot]  # (G,Tk,D)
+    valid = (slot < cap).astype(gates.dtype).reshape(G, T, k)
+    y = jnp.sum(out_k.reshape(G, T, k, D) * (gates * valid)[..., None], axis=2)
+    y = constrain(y, "hidden")
+
+    if cfg.shared_expert:
+        sh = params["shared"]
+        y = y + (act(x @ sh["w_gate"]) * (x @ sh["w_up"])) @ sh["w_down"]
+    return y, aux

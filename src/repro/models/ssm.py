@@ -1,0 +1,239 @@
+"""Mamba2 / SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Chunked SSD: intra-chunk quadratic attention-like term + inter-chunk
+recurrence over per-chunk states (``lax.scan``), giving O(S * Q) compute,
+O(1)-state decode, and exact equivalence with the sequential recurrence
+(property-tested in tests/test_ssm.py).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.shardctx import constrain
+
+SSM_GROUPS = 1  # n_groups for the B/C projections
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.ssm_inner + 2 * SSM_GROUPS * cfg.ssm_state
+
+
+def init_mamba(cfg: ModelConfig, key, dtype=jnp.float32):
+    """Projections are stored as separate matrices (z / x / B / C / dt and
+    per-stream conv kernels) rather than one fused in_proj: fused layouts
+    force activation splits at non-shard-aligned offsets on the 16-way model
+    axis, which SPMD resolves with full-tensor reshards (measured; see
+    EXPERIMENTS.md §Perf)."""
+    d, di, n, h = cfg.d_model, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    gn = SSM_GROUPS * n
+    keys = jax.random.split(key, 10)
+    s = 1.0 / math.sqrt(d)
+    rnd = lambda k, shp, sc: (jax.random.normal(k, shp) * sc).astype(dtype)
+    return {
+        "in_z": rnd(keys[0], (d, di), s),
+        "in_x": rnd(keys[1], (d, di), s),
+        "in_B": rnd(keys[2], (d, gn), s),
+        "in_C": rnd(keys[3], (d, gn), s),
+        "in_dt": rnd(keys[4], (d, h), s),
+        "conv_x": rnd(keys[5], (cfg.ssm_conv, di), 0.1),
+        "conv_B": rnd(keys[6], (cfg.ssm_conv, gn), 0.1),
+        "conv_C": rnd(keys[7], (cfg.ssm_conv, gn), 0.1),
+        "conv_bx": jnp.zeros((di,), dtype),
+        "conv_bB": jnp.zeros((gn,), dtype),
+        "conv_bC": jnp.zeros((gn,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(keys[8], (h,), jnp.float32) *
+                    (math.log(0.1) - math.log(1e-3)) + math.log(1e-3)))),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": rnd(keys[9], (di, d), 1.0 / math.sqrt(di)),
+    }
+
+
+def _causal_conv(xc, w, b):
+    """Depthwise causal conv.  xc: (B,S,Dc); w: (K,Dc)."""
+    K = w.shape[0]
+    pad = jnp.pad(xc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xc.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _gated_norm(y, z, scale, eps):
+    y = y * jax.nn.silu(z)
+    dt = y.dtype
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def _segsum_decay(dA_cum):
+    """dA_cum: (..., Q, H) within-chunk inclusive cumsum of dt*A.
+    Returns L: (..., H, Q, Q) with L[i,j] = exp(cum_i - cum_j) for i>=j else 0.
+    """
+    ci = dA_cum[..., :, None, :]  # (...,Q,1,H)
+    cj = dA_cum[..., None, :, :]  # (...,1,Q,H)
+    Q = dA_cum.shape[-2]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    diff = jnp.where(mask[..., None], ci - cj, -jnp.inf)
+    return jnp.exp(jnp.moveaxis(diff, -1, -3))  # (...,H,Q,Q)
+
+
+def ssd_chunked(cfg: ModelConfig, x, dt, A, Bm, Cm, h0=None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P)  dt: (B,S,H)  A: (H,)  Bm/Cm: (B,S,G,N)
+    Returns y: (B,S,H,P), final state (B,H,P,N).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    S_real = S
+    if S % Q != 0:
+        # pad with dt=0 steps: decay exp(0)=1 and zero input leave the state
+        # recurrence unchanged; padded outputs are discarded below.
+        pad = Q - S % Q
+        z2 = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        x, dt, Bm, Cm = z2(x), z2(dt), z2(Bm), z2(Cm)
+        S = S + pad
+    nc = S // Q
+    rep = H // (Bm.shape[2])
+    Bh = jnp.repeat(Bm, rep, axis=2)  # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    # the chunk axis nc is the shardable batch-like dim of every intra-chunk
+    # tensor (model axis; see launch.sharding.activation_specs) — without
+    # this the (B,nc,H,Q,Q) decay/score matrices replicate per device
+    r = lambda t, n: constrain(t.reshape((Bsz, nc, Q) + t.shape[2:]), n)
+    xc, dtc = r(x, "ssm_chunk_x"), r(dt, "ssm_chunk_dt")
+    Bc, Cc = r(Bh, "ssm_chunk_bc"), r(Ch, "ssm_chunk_bc")
+    dA = dtc * A  # (B,nc,Q,H)
+    cum = jnp.cumsum(dA, axis=2)
+    xdt = xc * dtc[..., None]
+
+    # intra-chunk (diagonal blocks)
+    L = constrain(_segsum_decay(cum), "ssm_chunk_l")  # (B,nc,H,Q,Q)
+    CB = constrain(jnp.einsum("bcihn,bcjhn->bchij", Cc, Bc), "ssm_chunk_l")
+    Yd = constrain(jnp.einsum("bchij,bcjhp->bcihp", CB * L, xdt), "ssm_chunk_x")
+
+    # per-chunk state contributions
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Q,H)
+    Sc = jnp.einsum("bcjhn,bcjhp->bchpn", Bc, xdt * decay_out[..., None])
+    Sc = constrain(Sc, "ssm_chunk_s")
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), x.dtype)
+
+    def body(h, inp):
+        s_c, dec = inp  # (B,H,P,N), (B,H)
+        h_in = h
+        h = h * dec[..., None, None] + s_c
+        return h, h_in
+
+    hT, h_in = lax.scan(body, h0,
+                        (jnp.moveaxis(Sc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,nc,H,P,N) state entering each chunk
+
+    Yo = constrain(
+        jnp.einsum("bcihn,bchpn->bcihp", Cc * jnp.exp(cum)[..., None], h_in),
+        "ssm_chunk_x")
+    y = (Yd + Yo).reshape(Bsz, S, H, P)[:, :S_real]
+    return y, hT
+
+
+def mamba_forward(params, x, cfg: ModelConfig, h0=None,
+                  return_cache: bool = False):
+    """Full-sequence mamba2 block.  x: (B,S,D)."""
+    Bsz, S, _ = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = constrain(x @ params["in_z"], "ssm_inner")
+    xr = constrain(x @ params["in_x"], "ssm_inner")
+    Br = x @ params["in_B"]
+    Cr = x @ params["in_C"]
+    dt = x @ params["in_dt"]
+    xs = constrain(_causal_conv(xr, params["conv_x"], params["conv_bx"]),
+                   "ssm_inner")
+    Bm = _causal_conv(Br, params["conv_B"], params["conv_bB"])
+    Cm = _causal_conv(Cr, params["conv_C"], params["conv_bC"])
+    xs = constrain(xs.reshape(Bsz, S, H, P), "ssm_heads")
+    Bm = Bm.reshape(Bsz, S, SSM_GROUPS, N)
+    Cm = Cm.reshape(Bsz, S, SSM_GROUPS, N)
+    A = -jnp.exp(params["A_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    y, hT = ssd_chunked(cfg, xs, dt.astype(xs.dtype), A.astype(xs.dtype), Bm, Cm, h0)
+    y = y + params["D"].astype(y.dtype)[:, None] * xs
+    y = constrain(y.reshape(Bsz, S, -1), "ssm_inner")
+    out = _gated_norm(y, z, params["norm_scale"], cfg.norm_eps) @ params["out_proj"]
+    if return_cache:
+        K = cfg.ssm_conv
+        conv_cache = {
+            "x": _left_pad_tail(xr, K - 1),
+            "B": _left_pad_tail(Br, K - 1),
+            "C": _left_pad_tail(Cr, K - 1),
+        }
+        return out, {"state": hT, "conv": conv_cache}
+    return out
+
+
+def _left_pad_tail(xc, n):
+    """Last n steps of xc, left-padded with zeros if S < n."""
+    S = xc.shape[1]
+    if S >= n:
+        return xc[:, -n:]
+    return jnp.pad(xc, ((0, 0), (n - S, 0), (0, 0)))
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    K = cfg.ssm_conv
+    gn = SSM_GROUPS * N
+    return {
+        "state": jnp.zeros((batch, H, P, N), dtype),
+        "conv": {
+            "x": jnp.zeros((batch, K - 1, cfg.ssm_inner), dtype),
+            "B": jnp.zeros((batch, K - 1, gn), dtype),
+            "C": jnp.zeros((batch, K - 1, gn), dtype),
+        },
+    }
+
+
+def mamba_decode(params, x, cache, cfg: ModelConfig):
+    """One-token decode.  x: (B,1,D).  O(1) state update."""
+    Bsz = x.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    x0 = x[:, 0]
+    z = x0 @ params["in_z"]
+    xr = x0 @ params["in_x"]
+    Br = x0 @ params["in_B"]
+    Cr = x0 @ params["in_C"]
+    dt = x0 @ params["in_dt"]
+
+    def dconv(hist_prev, cur, w, b):
+        hist = jnp.concatenate([hist_prev, cur[:, None]], axis=1)  # (B,K,·)
+        return jax.nn.silu(jnp.einsum("bkd,kd->bd", hist, w) + b), hist[:, 1:]
+
+    xs, cx = dconv(cache["conv"]["x"], xr, params["conv_x"], params["conv_bx"])
+    Bm, cB = dconv(cache["conv"]["B"], Br, params["conv_B"], params["conv_bB"])
+    Cm, cC = dconv(cache["conv"]["C"], Cr, params["conv_C"], params["conv_bC"])
+    xs = xs.reshape(Bsz, H, P)
+    Bm = jnp.repeat(Bm.reshape(Bsz, SSM_GROUPS, N), H // SSM_GROUPS, axis=1)
+    Cm = jnp.repeat(Cm.reshape(Bsz, SSM_GROUPS, N), H // SSM_GROUPS, axis=1)
+    # (conv caches already rolled by dconv above)
+    A = -jnp.exp(params["A_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    dA = jnp.exp(dt * A).astype(xs.dtype)  # (B,H)
+    dBx = jnp.einsum("bh,bhn,bhp->bhpn", dt.astype(xs.dtype), Bm, xs)
+    h = cache["state"] * dA[..., None, None] + dBx
+    y = jnp.einsum("bhn,bhpn->bhp", Cm, h) + params["D"].astype(xs.dtype)[:, None] * xs
+    y = y.reshape(Bsz, -1)
+    out = _gated_norm(y, z, params["norm_scale"], cfg.norm_eps) @ params["out_proj"]
+    new_cache = {"state": h, "conv": {"x": cx, "B": cB, "C": cC}}
+    return out[:, None], new_cache

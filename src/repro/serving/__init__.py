@@ -1,0 +1,2 @@
+from repro.serving.engine import CoachEngine, EngineConfig, EngineStats
+from repro.serving.generate import generate

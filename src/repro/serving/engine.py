@@ -1,0 +1,108 @@
+"""COACH serving engine: the full online loop over a continuous task stream.
+
+Wires together every subsystem:
+
+  offline   partition + quantization (core.partitioner) on the model's cost
+            graph -> a CollabRuntime split at the chosen group boundary
+  frontend  task features from the end segment's boundary activation via
+            the fused semantic-probe kernel (GAP + cosine + separability)
+  online    early exit (Eq. 10) / adaptive precision (Eq. 11) per task
+  pipeline  3-stage discrete-event accounting of the induced stream
+            (latency / throughput / bubbles), with measured wire bytes
+
+The JAX compute is real (CollabRuntime executes both segments); the
+*timing* comes from the calibrated device/link profiles, since this host
+is not a Jetson + A6000 pair (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import online as ON
+from repro.core.collab import CollabRuntime
+from repro.core.costs import DeviceProfile, LinkProfile
+from repro.core.pipeline import PipelineResult, TaskPlan, run_pipeline
+from repro.core.schedule import StageTimes
+from repro.data.pipeline import CorrelatedTaskStream, Task
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    bits_levels: Sequence[int] = (3, 4, 5, 6, 8)
+    default_bits: int = 8
+    update_centers: bool = True
+    eps: float = 0.005
+
+
+@dataclasses.dataclass
+class EngineStats:
+    pipeline: PipelineResult
+    exit_ratio: float
+    mean_bits: float
+    wire_kb_per_task: float
+    accuracy: float
+
+
+class CoachEngine:
+    def __init__(self, runtime: CollabRuntime, stage_times: StageTimes,
+                 end_dev: DeviceProfile, link: LinkProfile,
+                 cloud_dev: DeviceProfile, n_labels: int,
+                 calib_feats: np.ndarray, calib_labels: np.ndarray,
+                 cfg: EngineConfig = EngineConfig(),
+                 boundary_elems: Optional[int] = None):
+        self.rt = runtime
+        self.st = stage_times
+        self.link = link
+        self.cfg = cfg
+        dim = calib_feats.shape[1]
+        self.cache = ON.SemanticCache(n_labels, dim)
+        self.cache.warm_up(calib_feats, calib_labels)
+        self.th = ON.calibrate_thresholds(self.cache, calib_feats,
+                                          calib_labels, eps=cfg.eps,
+                                          bit_levels=cfg.bits_levels)
+        elems = boundary_elems or int(calib_feats.shape[1])
+        self.sched = ON.OnlineScheduler(
+            self.cache, self.th, elems, stage_times.T_e, stage_times.T_c,
+            update_centers=cfg.update_centers)
+
+    def run_stream(self, tasks: List[Task], arrival_period: float,
+                   classify) -> EngineStats:
+        """classify(task) -> (features, predicted_label): the caller runs
+        the real model (CollabRuntime) or a proxy; the engine makes the
+        COACH decisions and accounts the pipeline."""
+        plans, bits_used, correct = [], [], []
+        exits = 0
+        wire_bits_total = 0.0
+        for task in tasks:
+            bw = self.link.bps_at(arrival_period * task.id)
+            feats, pred = classify(task)
+            dec = self.sched.step(feats, bandwidth_bps=bw)
+            if dec.early_exit:
+                exits += 1
+                plans.append(TaskPlan(self.st.T_e, 0.0, 0.0, True))
+                correct.append(dec.result == task.label)
+            else:
+                bits = dec.bits or self.cfg.default_bits
+                bits_used.append(bits)
+                wire_bits = self.sched.elems * bits
+                wire_bits_total += wire_bits
+                t_tx = wire_bits / bw
+                plans.append(TaskPlan(
+                    self.st.T_e, t_tx, self.st.T_c,
+                    tx_offset=min(self.st.first_tx_offset, self.st.T_e),
+                    cloud_offset=self.st.cloud_start_offset))
+                correct.append(pred == task.label)
+                self.sched.report_label(feats, task.label)
+        pr = run_pipeline(plans, arrival_period=arrival_period, link=self.link)
+        n = len(tasks)
+        return EngineStats(
+            pipeline=pr,
+            exit_ratio=exits / n,
+            mean_bits=float(np.mean(bits_used)) if bits_used else 0.0,
+            wire_kb_per_task=wire_bits_total / 8e3 / n,
+            accuracy=float(np.mean(correct)),
+        )

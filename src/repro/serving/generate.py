@@ -1,0 +1,48 @@
+"""Autoregressive generation on top of prefill + decode_step — the serving
+substrate's inner loop (greedy or temperature sampling), jitted once per
+(batch, cache) shape.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+def generate(params, cfg: ModelConfig, prompt, max_new_tokens: int,
+             *, max_seq: Optional[int] = None, temperature: float = 0.0,
+             key=None):
+    """prompt: (B, S0) int32.  Returns (B, S0 + max_new_tokens) tokens."""
+    assert cfg.supports_decode and not cfg.embed_inputs
+    B, S0 = prompt.shape
+    max_seq = max_seq or (S0 + max_new_tokens)
+
+    logits, cache = jax.jit(
+        functools.partial(M.prefill, cfg=cfg, max_seq=max_seq)
+    )(params, inputs=prompt)
+
+    step = jax.jit(functools.partial(M.decode_step, cfg=cfg))
+
+    def pick(lg, k):
+        if temperature <= 0.0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, lg / temperature).astype(jnp.int32)
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    toks = prompt
+    nxt = pick(logits, key)[:, None]
+    for t in range(max_new_tokens):
+        toks = jnp.concatenate([toks, nxt], axis=1)
+        if t == max_new_tokens - 1:
+            break
+        logits, cache = step(params, cache=cache, inputs=nxt,
+                             pos=jnp.int32(S0 + t))
+        key, sub = jax.random.split(key)
+        nxt = pick(logits, sub)[:, None]
+    return toks

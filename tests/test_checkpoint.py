@@ -1,0 +1,35 @@
+"""Checkpoint IO: roundtrip (incl. bf16, nested tuples), latest_step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.models import model as M
+
+
+def test_roundtrip_model_params(tmp_path):
+    cfg = get_config("gemma2-2b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16)
+    save_checkpoint(str(tmp_path), 7, params)
+    assert latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(jnp.zeros_like, params)
+    restored = load_checkpoint(str(tmp_path), 7, like)
+    ok = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)), params,
+                      restored)
+    assert all(jax.tree.leaves(ok))
+    assert jax.tree.leaves(restored)[0].dtype == jnp.bfloat16
+
+
+def test_multiple_steps_and_overwrite(tmp_path):
+    tree = {"a": jnp.arange(5.0), "b": (jnp.ones((2, 2)),)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, jax.tree.map(lambda x: x * 2, tree))
+    assert latest_step(str(tmp_path)) == 2
+    r = load_checkpoint(str(tmp_path), 2, tree)
+    np.testing.assert_allclose(r["a"], np.arange(5.0) * 2)
+    # overwrite same step
+    save_checkpoint(str(tmp_path), 2, tree)
+    r = load_checkpoint(str(tmp_path), 2, tree)
+    np.testing.assert_allclose(r["a"], np.arange(5.0))

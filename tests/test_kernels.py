@@ -1,0 +1,86 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes / dtypes / bit-widths, plus hypothesis properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.uaq import uaq_dequantize, uaq_quantize
+from repro.kernels.semantic_cache import semantic_probe
+
+SHAPES = [(8, 128), (256, 256), (512, 768), (64, 260), (1024, 130 * 2)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_uaq_kernel_matches_ref(bits, shape, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(0), shape) * 3 + 1).astype(dtype)
+    p, s, z = uaq_quantize(x, bits, interpret=True)
+    pr, sr, zr = ref.uaq_quantize_ref(x, bits)
+    # scale may differ by 1 ulp -> allow off-by-one quanta on the exact .5
+    # rounding ties; bf16's coarse mantissa hits ties ~10x more often
+    q = ref.unpack4_ref(p) if bits == 4 else p
+    qr = ref.unpack4_ref(pr) if bits == 4 else pr
+    diff = np.abs(q.astype(np.int32) - qr.astype(np.int32))
+    # a 1-ulp scale difference can shift zp by 1 AND flip a rounding tie
+    assert diff.max() <= (2 if dtype == jnp.bfloat16 else 1)
+    assert (diff != 0).mean() < (1e-2 if dtype == jnp.bfloat16 else 1e-3)
+    np.testing.assert_allclose(s, sr, rtol=1e-6)
+    # roundtrip against the kernel dequant
+    y = uaq_dequantize(p, s, z, bits, interpret=True)
+    yr = ref.uaq_dequantize_ref(p, s, z, bits)
+    np.testing.assert_allclose(y, yr, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_uaq_roundtrip_error_bound(bits):
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, 512))
+    p, s, z = uaq_quantize(x, bits, interpret=True)
+    y = uaq_dequantize(p, s, z, bits, interpret=True)
+    # UAQ error bounded by half a quantum per element
+    err = jnp.abs(y - x)
+    assert float(jnp.max(err / s)) <= 0.5 + 1e-3
+
+
+@given(st.integers(1, 6), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_pack4_roundtrip_property(rows_p, cols_p, seed):
+    rows, cols = rows_p * 4, cols_p * 2
+    q = jax.random.randint(jax.random.PRNGKey(seed), (rows, cols), 0, 16
+                           ).astype(jnp.uint8)
+    packed = ref.pack4_ref(q)
+    assert packed.shape == (rows, cols // 2)
+    np.testing.assert_array_equal(ref.unpack4_ref(packed), q)
+
+
+@pytest.mark.parametrize("B,S,D,L", [(4, 64, 128, 10), (16, 1024, 128, 100),
+                                     (8, 512, 256, 37)])
+def test_semantic_probe_matches_ref(B, S, D, L):
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, S, D))
+    c = jax.random.normal(jax.random.PRNGKey(1), (L, D))
+    sep, best, sims = semantic_probe(x, c, interpret=True)
+    sep_r, best_r, sims_r = ref.semantic_probe_ref(x, c)
+    np.testing.assert_array_equal(best, best_r)
+    np.testing.assert_allclose(sims, sims_r, atol=1e-5)
+    np.testing.assert_allclose(sep, sep_r, rtol=1e-4, atol=1e-5)
+
+
+def test_ops_wrappers_nd():
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 32, 256))
+    p, s, z = ops.quantize_activation(x, 8)
+    assert p.shape == (4, 32, 256) and s.shape == (4, 32, 1)
+    y = ops.dequantize_activation(p, s, z, 8)
+    assert y.shape == x.shape
+    assert float(jnp.max(jnp.abs(y - x))) < float(jnp.max(s)) * 0.51
+
+
+def test_probe_sims_in_range():
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, 128, 64))
+    c = jax.random.normal(jax.random.PRNGKey(4), (12, 64))
+    _, _, sims = ops.probe_cache(x, c)
+    assert float(jnp.min(sims)) >= -1e-6 and float(jnp.max(sims)) <= 1 + 1e-6

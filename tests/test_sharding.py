@@ -1,0 +1,104 @@
+"""Sharding rules: every spec axis must divide its dim on the production
+meshes, for every architecture (params + caches)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_supported
+from repro.launch import steps as ST
+from repro.launch.sharding import (activation_specs, cache_spec, param_spec,
+                                   shard_cache, shard_params)
+
+
+class FakeMesh:
+    """Shape-only stand-in (no devices needed to validate the rules)."""
+
+    def __init__(self, shape_map):
+        self.shape = shape_map
+        self.axis_names = tuple(shape_map)
+
+
+MESHES = [FakeMesh({"data": 16, "model": 16}),
+          FakeMesh({"pod": 2, "data": 16, "model": 16})]
+
+
+def _axis_size(mesh, entry):
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        return int(np.prod([mesh.shape[e] for e in entry]))
+    return mesh.shape[entry]
+
+
+def _check_spec(spec, shape, mesh, what):
+    assert len(spec) <= len(shape), (what, spec, shape)
+    for dim, entry in zip(shape, spec):
+        size = _axis_size(mesh, entry)
+        assert dim % size == 0, (what, spec, shape, dim, size)
+    # no mesh axis used twice
+    used = []
+    for entry in spec:
+        if entry is None:
+            continue
+        used += list(entry) if isinstance(entry, tuple) else [entry]
+    assert len(used) == len(set(used)), (what, spec)
+
+
+@pytest.mark.parametrize("mesh", MESHES, ids=["single", "multi"])
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_specs_divide(arch, mesh):
+    cfg = get_config(arch)
+    aparams = ST.abstract_params(cfg, jnp.bfloat16)
+    flat = jax.tree_util.tree_flatten_with_path(aparams)[0]
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        spec = param_spec(pstr, leaf.shape, mesh, cfg.num_groups)
+        _check_spec(spec, leaf.shape, mesh, f"{arch}:{pstr}")
+
+
+@pytest.mark.parametrize("mesh", MESHES, ids=["single", "multi"])
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_cache_specs_divide(arch, mesh):
+    cfg = get_config(arch)
+    for sname in ("decode_32k", "long_500k"):
+        shape = SHAPES[sname]
+        ok, _ = shape_supported(cfg, shape)
+        if not ok:
+            continue
+        acache = ST.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        for leaf in jax.tree.leaves(acache):
+            spec = cache_spec(mesh, cfg, shape.global_batch, leaf.shape)
+            _check_spec(spec, leaf.shape, mesh, f"{arch}:{sname}:{leaf.shape}")
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_activation_specs_well_formed(arch):
+    cfg = get_config(arch)
+    for mesh in MESHES:
+        specs = activation_specs(cfg, mesh, 256)
+        for name, spec in specs.items():
+            if spec is None:
+                continue
+            used = []
+            for entry in spec:
+                if entry is None:
+                    continue
+                used += list(entry) if isinstance(entry, tuple) else [entry]
+            assert len(used) == len(set(used)), (arch, name, spec)
+
+
+def test_row_parallel_orientation():
+    mesh = MESHES[0]
+    # w_down: contraction dim (F) on model, output on data
+    s = param_spec("groups/0/mlp/w_down", (13, 9216, 2304), mesh, 13)
+    assert s[1] == "model"
+    # w_gate: column-parallel
+    s = param_spec("groups/0/mlp/w_gate", (13, 2304, 9216), mesh, 13)
+    assert s[2] == "model"
+    # embed: vocab on model (matches logits constraint)
+    s = param_spec("embed", (256000, 2304), mesh, 13)
+    assert s[0] == "model"

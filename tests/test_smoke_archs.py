@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests: REDUCED same-family variants (<=2 groups,
+d_model<=256, <=4 experts) run one forward + one train step on CPU and
+assert output shapes + finite values.  The FULL configs are exercised only
+through the dry-run (abstract, no allocation)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES, all_pairs, get_config, shape_supported
+from repro.launch import steps as ST
+from repro.models import model as M
+from repro.training.optim import AdamWConfig, adamw_init
+
+
+@pytest.fixture(scope="module", params=sorted(ARCHS))
+def arch_setup(request):
+    cfg = get_config(request.param).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return request.param, cfg, params
+
+
+def _batch(cfg, B=2, S=32, key=jax.random.PRNGKey(1)):
+    labels = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.embed_inputs:
+        return {"embeds": jax.random.normal(key, (B, S, cfg.d_model)) * 0.3,
+                "labels": labels}
+    return {"tokens": labels, "labels": labels}
+
+
+def test_full_config_matches_assignment(arch_setup):
+    arch, _, _ = arch_setup
+    full = get_config(arch)
+    spec = {
+        "mamba2-130m": dict(num_layers=24, d_model=768, vocab_size=50280),
+        "qwen2-vl-2b": dict(num_layers=28, d_model=1536, num_heads=12,
+                            num_kv_heads=2, d_ff=8960, vocab_size=151936),
+        "llama4-scout-17b-a16e": dict(num_layers=48, d_model=5120,
+                                      num_heads=40, num_kv_heads=8,
+                                      d_ff=8192, vocab_size=202048,
+                                      num_experts=16, experts_per_token=1),
+        "jamba-1.5-large-398b": dict(num_layers=72, d_model=8192,
+                                     num_heads=64, num_kv_heads=8,
+                                     d_ff=24576, vocab_size=65536,
+                                     num_experts=16, experts_per_token=2),
+        "gemma2-2b": dict(num_layers=26, d_model=2304, num_heads=8,
+                          num_kv_heads=4, d_ff=9216, vocab_size=256000),
+        "h2o-danube-3-4b": dict(num_layers=24, d_model=3840, num_heads=32,
+                                num_kv_heads=8, d_ff=10240, vocab_size=32000),
+        "gemma-7b": dict(num_layers=28, d_model=3072, num_heads=16,
+                         num_kv_heads=16, d_ff=24576, vocab_size=256000),
+        "mixtral-8x7b": dict(num_layers=32, d_model=4096, num_heads=32,
+                             num_kv_heads=8, d_ff=14336, vocab_size=32000,
+                             num_experts=8, experts_per_token=2),
+        "hubert-xlarge": dict(num_layers=48, d_model=1280, num_heads=16,
+                              num_kv_heads=16, d_ff=5120, vocab_size=504),
+        "qwen3-14b": dict(num_layers=40, d_model=5120, num_heads=40,
+                          num_kv_heads=8, d_ff=17408, vocab_size=151936),
+    }[arch]
+    for k, v in spec.items():
+        assert getattr(full, k) == v, (arch, k)
+    assert full.citation
+
+
+def test_forward_shapes_and_finite(arch_setup):
+    arch, cfg, params = arch_setup
+    b = _batch(cfg)
+    inputs = b.get("tokens", b.get("embeds"))
+    h, _, aux = M.forward(params, cfg, inputs)
+    assert h.shape == (2, 32, cfg.d_model)
+    logits = M._lm_head(params, cfg, h)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_one_train_step(arch_setup):
+    arch, cfg, params = arch_setup
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    step = jax.jit(ST.make_train_step(cfg, opt_cfg))
+    opt = adamw_init(params, opt_cfg)
+    b = _batch(cfg)
+    p2, o2, loss, mets = step(params, opt, b)
+    assert bool(jnp.isfinite(loss))
+    # params actually moved
+    moved = jax.tree.map(lambda a, b_: float(jnp.max(jnp.abs(a - b_))),
+                         params, p2)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+def test_microbatched_step_close_to_full(arch_setup):
+    arch, cfg, params = arch_setup
+    if cfg.num_experts:  # capacity drops differ between groupings
+        cfg = dataclasses.replace(cfg, capacity_factor=100.0)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    b = _batch(cfg, B=4)
+    opt = adamw_init(params, opt_cfg)
+    _, _, l1, _ = jax.jit(ST.make_train_step(cfg, opt_cfg))(params, opt, b)
+    _, _, l2, _ = jax.jit(ST.make_train_step(cfg, opt_cfg, microbatches=2))(
+        params, opt, b)
+    assert abs(float(l1) - float(l2)) < 5e-2
+
+
+def test_pair_matrix_counts():
+    pairs = all_pairs()
+    runnable = [p for p in pairs if p[2]]
+    skipped = [p for p in pairs if not p[2]]
+    assert len(pairs) == 40
+    assert len(runnable) == 35
+    assert {(a, s) for a, s, _, _ in skipped} == {
+        ("qwen2-vl-2b", "long_500k"), ("gemma-7b", "long_500k"),
+        ("qwen3-14b", "long_500k"), ("hubert-xlarge", "decode_32k"),
+        ("hubert-xlarge", "long_500k")}
+
+
+def test_batch_chunked_prefill_identical():
+    """lax.map-chunked prefill must return identical logits and caches."""
+    import numpy as np
+    from repro.launch import steps as ST
+    cfg = get_config("gemma2-2b").reduced()
+    p = M.init_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.randint(jax.random.PRNGKey(1), (4, 24), 0, cfg.vocab_size)
+    l1, c1 = ST.make_prefill_step(cfg, 32)(p, x)
+    l2, c2 = ST.make_prefill_step(cfg, 32, batch_chunks=2)(p, x)
+    np.testing.assert_allclose(l1, l2, rtol=2e-5, atol=2e-5)
+    ok = jax.tree.map(lambda a, b: bool(np.allclose(a, b, rtol=2e-5,
+                                                    atol=2e-5)), c1, c2)
+    assert all(jax.tree.leaves(ok))
