@@ -1,0 +1,94 @@
+"""2-hop vs 3-hop pipeline comparison on the generalized N-stage core.
+
+For ResNet101/VGG16: partition end->cloud ("2-hop": Jetson NX + A6000 over
+WiFi) and end->edge->cloud ("3-hop": AGX-Orin mid tier; WiFi uplink +
+metro-ethernet backhaul) with the same multi-hop divide-and-conquer,
+replay a steady task stream through ``run_pipeline``, and report latency /
+throughput / per-resource bubble fractions side by side.  Also emits
+``BENCH_pipeline.json`` (the perf-trajectory artifact) when an output
+directory is given.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.costs import (A6000_SERVER, EDGE_AGX_ORIN, ETH_LAN,
+                              JETSON_NX, WIFI_5GHZ)
+from repro.core.partitioner import coach_offline_multihop
+from repro.core.pipeline import plan_from_stage_times, run_pipeline
+from repro.models.cnn import resnet101, vgg16
+
+MBPS_UPLINK = 50.0
+N_TASKS = 400
+ARRIVAL_SLACK = 1.05
+
+# n_tiers -> (devices, links); links = n_tiers - 1
+DEPLOYMENTS = {
+    2: ((JETSON_NX, A6000_SERVER), (WIFI_5GHZ(MBPS_UPLINK),)),
+    3: ((JETSON_NX, EDGE_AGX_ORIN, A6000_SERVER),
+        (WIFI_5GHZ(MBPS_UPLINK), ETH_LAN())),
+}
+
+
+def _resource_names(n_links: int):
+    comp = ["end"] + [f"edge{k}" for k in range(1, n_links)] + ["cloud"]
+    return comp, [f"link{k}" for k in range(n_links)]
+
+
+def run_deployment(graph, n_tiers: int, n_tasks: int = N_TASKS,
+                   chain_stride: int = 1) -> dict:
+    devices, links = DEPLOYMENTS[n_tiers]
+    off = coach_offline_multihop(graph, devices, links,
+                                 chain_stride=chain_stride)
+    st = off.times
+    plans = [plan_from_stage_times(st) for _ in range(n_tasks)]
+    pr = run_pipeline(plans, arrival_period=st.max_stage * ARRIVAL_SLACK,
+                      links=list(links))
+    comp_names, link_names = _resource_names(len(links))
+    bubbles = {name: pr.bubble_fraction(("compute", k))
+               for k, name in enumerate(comp_names)}
+    bubbles.update({name: pr.bubble_fraction(("link", k))
+                    for k, name in enumerate(link_names)})
+    return {
+        "model": graph.name,
+        "hops": n_tiers,
+        "segments": [len(s) for s in off.decision.segments(graph)],
+        "single_task_ms": st.latency * 1e3,
+        "mean_latency_ms": pr.mean_latency * 1e3,
+        "p99_latency_ms": pr.p99_latency * 1e3,
+        "throughput_its": pr.throughput,
+        "max_stage_ms": st.max_stage * 1e3,
+        "objective_ms": off.objective * 1e3,
+        "bubble_fraction": bubbles,
+    }
+
+
+def run(out_dir=None, n_tasks: int = N_TASKS):
+    rows = ["multihop,model,hops,latency_ms,p99_ms,throughput_its,"
+            "max_stage_ms,bubble_cloud,bubble_links"]
+    payload = []
+    for graph, stride in ((vgg16(), 1), (resnet101(), 4)):
+        for n_tiers in (2, 3):
+            r = run_deployment(graph, n_tiers, n_tasks=n_tasks,
+                               chain_stride=stride)
+            payload.append(r)
+            bl = ";".join(f"{r['bubble_fraction'][f'link{k}']:.3f}"
+                          for k in range(n_tiers - 1))
+            rows.append(
+                f"multihop,{r['model']},{r['hops']},"
+                f"{r['mean_latency_ms']:.2f},{r['p99_latency_ms']:.2f},"
+                f"{r['throughput_its']:.1f},{r['max_stage_ms']:.2f},"
+                f"{r['bubble_fraction']['cloud']:.3f},{bl}")
+    if out_dir is not None:
+        path = Path(out_dir) / "BENCH_pipeline.json"
+        path.write_text(json.dumps(payload, indent=2) + "\n")
+        # perf-trajectory copy at the repo root (stable path across runs)
+        root = Path(__file__).resolve().parent.parent / "BENCH_pipeline.json"
+        root.write_text(json.dumps(payload, indent=2) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run(out_dir="experiments/bench")))

@@ -15,7 +15,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 from benchmarks import (ablation, arch_partition, fig1_locality,
                         fig2_schemes, fig5_dynamic, fig6_fig7_bandwidth,
-                        kernels_bench, roofline, table1_latency,
+                        kernels_bench, multihop, roofline, table1_latency,
                         table2_context)
 
 MODULES = {
@@ -28,6 +28,7 @@ MODULES = {
     "ablation": ablation,
     "arch_partition": arch_partition,
     "kernels": kernels_bench,
+    "multihop": multihop,  # 2-hop vs 3-hop; emits BENCH_pipeline.json
     "roofline": roofline,
 }
 

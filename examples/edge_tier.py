@@ -1,0 +1,119 @@
+"""End -> edge -> cloud (3-hop) collaborative serving scenario.
+
+The full COACH stack on a three-tier deployment: the multi-hop offline
+component picks an ordered multi-cut (Jetson end, AGX-Orin edge, A6000
+cloud; WiFi uplink + metro-ethernet backhaul), the real JAX model runs as
+three ``CollabRuntime`` segments with one quantized ``WirePacket`` per
+hop, the online component decides early exit / adaptive precision per
+task, and the ``2n+1``-resource pipeline accounts latency, throughput,
+and per-resource bubbles.  A classic 2-tier (end -> cloud) run of the same
+model/stream prints alongside for comparison.
+
+  PYTHONPATH=src python examples/edge_tier.py \
+      [--arch gemma2-2b] [--requests 64] [--bandwidth 50]
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.core.collab import CollabRuntime
+from repro.core.costs import (A6000_SERVER, EDGE_AGX_ORIN, ETH_LAN,
+                              JETSON_NX, WIFI_5GHZ, transformer_graph)
+from repro.core.partitioner import coach_offline_multihop
+from repro.data.pipeline import CorrelatedTaskStream, make_calibration_set
+from repro.models import model as M
+from repro.serving.engine import CoachEngine
+
+
+def group_cuts_from_frontiers(decision, cfg):
+    """Map the layer-level multi-cut onto strictly increasing group
+    boundaries of the scanned parameter stack (embed node is id 0)."""
+    cuts = []
+    lo = 1
+    for k, frontier in enumerate(decision.cuts):
+        n_layers = sum(1 for i in frontier if 0 < i <= cfg.num_layers)
+        hi = cfg.num_groups - (decision.n_hops - k)
+        cut = min(max(lo, round(n_layers / cfg.group_size)), hi)
+        cuts.append(cut)
+        lo = cut + 1
+    return tuple(cuts)
+
+
+def run_tier(cfg, params, graph, devices, links, stream, feats, labels,
+             requests: int, seed: int):
+    off = coach_offline_multihop(graph, devices, links)
+    cuts = group_cuts_from_frontiers(off.decision, cfg)
+    hop_bits = [int(np.mean(list(b.values()))) if b else 8
+                for b in off.decision.all_hop_bits]
+    rt = CollabRuntime(cfg, params, cuts, default_bits=hop_bits)
+    engine = CoachEngine(rt, off.times, devices[0], links[0], devices[-1],
+                         n_labels=16, calib_feats=feats, calib_labels=labels,
+                         boundary_elems=128 * cfg.d_model, links=list(links))
+
+    def classify(task):
+        toks = (np.abs((task.features[:8] * 1000).astype(np.int64))
+                % cfg.vocab_size).astype(np.int32)
+        inp = jnp.asarray(toks)[None]
+        logits, _packets = rt.run(inp)
+        return task.features, int(np.argmax(logits[0]) % stream.n_labels)
+
+    stats = engine.run_stream(stream.tasks(requests),
+                              arrival_period=off.times.max_stage,
+                              classify=classify)
+    return off, cuts, stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="gemma2-2b")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--bandwidth", type=float, default=50.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced(num_layers=4 * len(
+        get_config(args.arch).pattern))  # >= 4 groups for a 3-segment split
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init_params(cfg, key)
+    graph = transformer_graph(cfg, batch=1, seq=128)
+    stream = CorrelatedTaskStream(n_labels=16, dim=cfg.d_model,
+                                  correlation="medium", seed=args.seed)
+    feats, labels = make_calibration_set(stream, n=300)
+
+    tiers = {
+        "end->cloud": ((JETSON_NX, A6000_SERVER),
+                       (WIFI_5GHZ(args.bandwidth),)),
+        "end->edge->cloud": ((JETSON_NX, EDGE_AGX_ORIN, A6000_SERVER),
+                             (WIFI_5GHZ(args.bandwidth), ETH_LAN())),
+    }
+    for name, (devices, links) in tiers.items():
+        off, cuts, stats = run_tier(cfg, params, graph, devices, links,
+                                    stream, feats, labels,
+                                    args.requests, args.seed)
+        pr = stats.pipeline
+        bubbles = " ".join(
+            f"c{k}={pr.bubble_fraction(('compute', k)):.2f}"
+            for k in range(len(devices)))
+        bubbles += " " + " ".join(
+            f"l{k}={pr.bubble_fraction(('link', k)):.2f}"
+            for k in range(len(links)))
+        print(f"[{name}] arch={cfg.name} cuts={cuts}/{cfg.num_groups} "
+              f"objective={off.objective * 1e3:.2f}ms")
+        print(f"  exit_ratio={stats.exit_ratio:.2%} "
+              f"mean_bits={stats.mean_bits:.1f} "
+              f"wire_kb/task={stats.wire_kb_per_task:.1f}")
+        print(f"  latency mean={pr.mean_latency * 1e3:.2f}ms "
+              f"p99={pr.p99_latency * 1e3:.2f}ms "
+              f"thpt={pr.throughput:.1f} it/s bubbles: {bubbles}")
+
+
+if __name__ == "__main__":
+    main()

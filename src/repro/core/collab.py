@@ -1,14 +1,17 @@
 """COACH collaborative execution in JAX: the model's scanned group stack is
-split at a partition point; the end segment runs on the "end" (pod 0), the
-boundary activation is UAQ-quantized (Pallas kernel), transferred, dequantized
-and completed on the "cloud" (pod 1).
+split at one or more partition points; segment 0 runs on the "end" device,
+each boundary activation is UAQ-quantized (Pallas kernel), transferred over
+its hop as a ``WirePacket``, dequantized and continued on the next tier —
+the last segment (the "cloud") finishes with norm + head.  The classic
+end->cloud deployment is the single-cut case of the same machinery.
 
 Two realizations:
 
-  1. ``CollabRuntime`` — two jitted stage functions with an explicit wire
-     format between them.  Runs anywhere (CPU tests/examples); the wire
-     bytes are exactly what the cost model prices, and the online component
-     consumes the GAP features computed by the fused semantic-probe kernel.
+  1. ``CollabRuntime`` — ``n_hops + 1`` jitted stage functions with an
+     explicit wire format between them (one ``WirePacket`` per hop).  Runs
+     anywhere (CPU tests/examples); the wire bytes are exactly what the
+     cost model prices, and the online component consumes the GAP features
+     computed by the fused semantic-probe kernel on the first boundary.
 
   2. ``make_collab_pipeline_step`` — the multi-pod SPMD form: layer groups
      sharded over the "pod" mesh axis, microbatched software pipeline where
@@ -21,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -35,18 +38,34 @@ from repro.models.config import ModelConfig
 
 
 # ---------------------------------------------------------------- splitting
-def split_params(params, cfg: ModelConfig, cut_group: int):
-    """Split stacked group params at ``cut_group`` (end gets [0, cut))."""
+def split_params_multi(params, cfg: ModelConfig,
+                       cut_groups: Sequence[int]) -> List[Dict]:
+    """Split stacked group params at each cut in ``cut_groups`` (strictly
+    increasing group indices) into ``len(cut_groups) + 1`` per-device
+    segments: segment k runs groups ``[cut_{k-1}, cut_k)``.  Segment 0 owns
+    the embedding; the last segment owns final norm + head (and the tied
+    embedding when the head is tied)."""
+    cuts = list(cut_groups)
+    assert all(0 < c < cfg.num_groups for c in cuts), cuts
+    assert all(a < b for a, b in zip(cuts, cuts[1:])), "cuts must increase"
     take = lambda t, sl: jax.tree.map(lambda x: x[sl], t)
-    end = {"groups": take(params["groups"], slice(0, cut_group))}
-    cloud = {"groups": take(params["groups"], slice(cut_group, None)),
-             "final_norm": params["final_norm"]}
+    bounds = [0] + cuts + [cfg.num_groups]
+    segs: List[Dict] = [
+        {"groups": take(params["groups"], slice(bounds[k], bounds[k + 1]))}
+        for k in range(len(bounds) - 1)]
+    segs[-1]["final_norm"] = params["final_norm"]
     if "embed" in params:
-        end["embed"] = params["embed"]
+        segs[0]["embed"] = params["embed"]
         if "lm_head" not in params:  # tied head lives on the cloud too
-            cloud["embed"] = params["embed"]
+            segs[-1]["embed"] = params["embed"]
     if "lm_head" in params:
-        cloud["lm_head"] = params["lm_head"]
+        segs[-1]["lm_head"] = params["lm_head"]
+    return segs
+
+
+def split_params(params, cfg: ModelConfig, cut_group: int):
+    """Classic 2-device split at ``cut_group`` (end gets [0, cut))."""
+    end, cloud = split_params_multi(params, cfg, (cut_group,))
     return end, cloud
 
 
@@ -63,66 +82,150 @@ def _run_groups(groups, h, cfg: ModelConfig, positions):
 # ---------------------------------------------------------------- runtime
 @dataclasses.dataclass
 class WirePacket:
-    """Quantized boundary activation as transmitted end -> cloud."""
+    """Quantized boundary activation as transmitted over one hop."""
     payload: jnp.ndarray  # uint8 (B,S,D*bits/8)
     scale: jnp.ndarray
     zp: jnp.ndarray
     bits: int
+    hop: int = 0  # which link this packet crosses (0 = end's uplink)
 
     @property
     def wire_bytes(self) -> int:
         return (self.payload.size + self.scale.size * 4 + self.zp.size * 4)
 
+    def dequantize(self, out_dtype=jnp.float32) -> jnp.ndarray:
+        return KOPS.dequantize_activation(
+            self.payload, self.scale, self.zp, self.bits,
+            out_dtype=out_dtype)
+
 
 class CollabRuntime:
-    """End/cloud staged executor for one model + partition decision."""
+    """Staged executor for one model + (multi-)partition decision.
 
-    def __init__(self, cfg: ModelConfig, params, cut_group: int,
-                 default_bits: int = 8):
+    ``cut_group`` may be a single group index (classic end->cloud split)
+    or an increasing sequence of indices (end -> edge tiers -> cloud, one
+    ``WirePacket`` per hop).  ``default_bits`` is likewise an int or a
+    per-hop sequence."""
+
+    def __init__(self, cfg: ModelConfig, params,
+                 cut_group: Union[int, Sequence[int]],
+                 default_bits: Union[int, Sequence[int]] = 8):
         self.cfg = cfg
-        self.cut = cut_group
-        self.default_bits = default_bits
-        self.p_end, self.p_cloud = split_params(params, cfg, cut_group)
-        self._end_fn = jax.jit(self._end_forward)
-        self._cloud_fn = jax.jit(self._cloud_forward)
+        self.cuts: Tuple[int, ...] = tuple(cut_group) \
+            if isinstance(cut_group, (tuple, list)) else (int(cut_group),)
+        self.cut = self.cuts[0]
+        bits = tuple(default_bits) \
+            if isinstance(default_bits, (tuple, list)) else \
+            (int(default_bits),) * self.n_hops
+        assert len(bits) == self.n_hops, "need one default_bits per hop"
+        self.default_bits_per_hop = bits
+        self.default_bits = bits[0]
+        self.p_segments = split_params_multi(params, cfg, self.cuts)
+        self._seg_fns = (
+            [jax.jit(self._first_forward)]
+            + [jax.jit(self._mid_forward)] * (self.n_hops - 1)
+            + [jax.jit(self._last_forward)])
         self._probe = KOPS.probe_cache
 
-    # ---- stage A (end device / pod 0)
-    def _end_forward(self, p_end, inputs):
+    @property
+    def n_hops(self) -> int:
+        return len(self.cuts)
+
+    @property
+    def n_segments(self) -> int:
+        return self.n_hops + 1
+
+    # classic 2-segment views
+    @property
+    def p_end(self):
+        return self.p_segments[0]
+
+    @property
+    def p_cloud(self):
+        return self.p_segments[-1]
+
+    @property
+    def _end_fn(self):
+        return self._seg_fns[0]
+
+    @property
+    def _cloud_fn(self):
+        return self._seg_fns[-1]
+
+    # ---- per-segment forwards (jitted)
+    @staticmethod
+    def _positions(B: int, S: int) -> jnp.ndarray:
+        return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def _first_forward(self, p, inputs):
         cfg = self.cfg
         B, S = inputs.shape[:2]
-        h = M._embed({**p_end}, cfg, inputs)
-        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
-                                     (B, S))
-        return _run_groups(p_end["groups"], h, cfg, positions)
+        h = M._embed({**p}, cfg, inputs)
+        return _run_groups(p["groups"], h, cfg, self._positions(B, S))
 
+    def _mid_forward(self, p, h):
+        B, S = h.shape[:2]
+        return _run_groups(p["groups"], h, self.cfg, self._positions(B, S))
+
+    def _last_forward(self, p, h):
+        cfg = self.cfg
+        B, S = h.shape[:2]
+        h = _run_groups(p["groups"], h, cfg, self._positions(B, S))
+        h = L.rms_norm(h, p["final_norm"], cfg.norm_eps)
+        return M._lm_head(p, cfg, h[:, -1])
+
+    def _quantize(self, h, hop: int, bits: Optional[int]) -> WirePacket:
+        bits = bits or self.default_bits_per_hop[hop]
+        payload, scale, zp = KOPS.quantize_activation(h, bits)
+        return WirePacket(payload, scale, zp, bits, hop=hop)
+
+    def segment_step(self, k: int, x, bits: Optional[int] = None):
+        """Run segment ``k``.  ``x`` is the raw model input for ``k = 0``,
+        else the ``WirePacket`` delivered over hop ``k-1``.  Intermediate
+        segments return ``(WirePacket for hop k, boundary activation)``;
+        the last segment returns the logits."""
+        if k > 0:
+            assert isinstance(x, WirePacket) and x.hop == k - 1, \
+                f"segment {k} consumes the hop-{k - 1} packet"
+            x = x.dequantize()
+        h = self._seg_fns[k](self.p_segments[k], x)
+        if k == self.n_hops:
+            return h
+        return self._quantize(h, k, bits), h
+
+    # ---- stage A (end device / pod 0)
     def end_step(self, inputs, bits: Optional[int] = None
                  ) -> Tuple[WirePacket, jnp.ndarray]:
-        """Returns (wire packet, boundary activation pre-quant)."""
-        h = self._end_fn(self.p_end, inputs)
-        bits = bits or self.default_bits
-        payload, scale, zp = KOPS.quantize_activation(h, bits)
-        return WirePacket(payload, scale, zp, bits), h
+        """Returns (hop-0 wire packet, boundary activation pre-quant)."""
+        return self.segment_step(0, inputs, bits=bits)
 
     def probe(self, h, centers):
         """Fused GAP+cosine+separability on the boundary activation."""
         return self._probe(h, centers)
 
-    # ---- stage B (cloud / pod 1)
-    def _cloud_forward(self, p_cloud, h):
-        cfg = self.cfg
-        B, S = h.shape[:2]
-        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
-                                     (B, S))
-        h = _run_groups(p_cloud["groups"], h, cfg, positions)
-        h = L.rms_norm(h, p_cloud["final_norm"], cfg.norm_eps)
-        return M._lm_head(p_cloud, cfg, h[:, -1])
-
+    # ---- stage B (cloud / last segment); classic path keeps working for
+    # single-cut runtimes, and for multi-cut ones this relays the packet
+    # through the remaining tiers.
     def cloud_step(self, packet: WirePacket) -> jnp.ndarray:
-        h = KOPS.dequantize_activation(
-            packet.payload, packet.scale, packet.zp, packet.bits,
-            out_dtype=jnp.float32)
-        return self._cloud_fn(self.p_cloud, h)
+        out = packet
+        for k in range(packet.hop + 1, self.n_segments):
+            out = self.segment_step(k, out)
+            if isinstance(out, tuple):
+                out = out[0]
+        return out
+
+    def run(self, inputs, bits: Optional[Sequence[Optional[int]]] = None):
+        """Full multi-hop forward: returns (logits, per-hop packets)."""
+        bits = tuple(bits) if bits is not None else (None,) * self.n_hops
+        assert len(bits) == self.n_hops
+        packets: List[WirePacket] = []
+        pkt, _ = self.segment_step(0, inputs, bits=bits[0])
+        packets.append(pkt)
+        for k in range(1, self.n_hops):
+            pkt, _ = self.segment_step(k, pkt, bits=bits[k])
+            packets.append(pkt)
+        logits = self.segment_step(self.n_segments - 1, pkt)
+        return logits, packets
 
     # ---- reference: monolithic forward (accuracy-loss measurement)
     def monolithic(self, params, inputs):
@@ -194,13 +297,23 @@ def make_collab_pipeline_step(cfg: ModelConfig, mesh, *, bits: int = 8,
             # pod 0 holds zeros; reduce so the (replicated) output is pod 1's
             return lax.psum(outs, "pod")
 
-        fn = jax.shard_map(
-            spmd, mesh=mesh,
-            in_specs=(P("pod"), P()),
-            out_specs=P(),
-            check_vma=False,
-            axis_names=frozenset({"pod"}),
-        )
+        if hasattr(jax, "shard_map"):  # jax >= 0.6 API
+            fn = jax.shard_map(
+                spmd, mesh=mesh,
+                in_specs=(P("pod"), P()),
+                out_specs=P(),
+                check_vma=False,
+                axis_names=frozenset({"pod"}),
+            )
+        else:  # jax 0.4.x: experimental API (check_rep, auto)
+            from jax.experimental.shard_map import shard_map as _shard_map
+            fn = _shard_map(
+                spmd, mesh=mesh,
+                in_specs=(P("pod"), P()),
+                out_specs=P(),
+                check_rep=False,
+                auto=auto,
+            )
         # final norm + head on the pipeline output (cloud side)
         h = fn((params["groups"],), tokens)
         h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)

@@ -71,6 +71,12 @@ JETSON_TX2 = DeviceProfile("jetson-tx2", 2.0e12)
 A6000_SERVER = DeviceProfile("a6000", 25e12)
 WIFI_5GHZ = lambda mbps=100.0: LinkProfile("wifi", mbps * 1e6)
 
+# Mid-tier edge server for end->edge->cloud (3-hop) scenarios: an AGX-Orin
+# class box between the Jetson ends and the A6000 cloud, reached over WiFi
+# and wired to the cloud over metro ethernet.
+EDGE_AGX_ORIN = DeviceProfile("agx-orin", 10e12)
+ETH_LAN = lambda mbps=940.0: LinkProfile("eth-lan", mbps * 1e6)
+
 # TPU adaptation: a v5e slice as the weak "end", a pod as the "cloud".
 TPU_V5E_CHIP = DeviceProfile("v5e-chip", 197e12, efficiency=0.5)
 TPU_POD_256 = DeviceProfile("v5e-pod", 197e12 * 256, efficiency=0.4)

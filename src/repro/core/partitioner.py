@@ -1,30 +1,36 @@
-"""COACH offline component — Algorithm 1.
+"""COACH offline component — Algorithm 1, generalized to multi-hop chains.
 
 Recursive divide-and-conquer over the model DAG:
 
   1. cluster parallel branches into *virtual blocks*, reducing the DAG to a
      chain flow  B = {b_1 .. b_n}  (Fig. 4);
-  2. sweep chain-level cuts; per boundary tensor, pick quantization
-     precision by dichotomous search against the accuracy oracle (Eq. 1)
-     and then relax bits upward if that lowers the bubble objective;
-  3. recurse into virtual blocks crossing the best cuts: each internal
-     branch is cut independently at a shared flop-ratio grid (this is what
-     turns the O(c^n) joint branch search into O(c·n));
+  2. sweep chain-level cuts — for an ``n_hops``-link deployment, ordered
+     multi-cut tuples (non-decreasing chain positions, one frontier per
+     hop); per boundary tensor and hop, pick quantization precision by
+     dichotomous search against the accuracy oracle (Eq. 1) and then relax
+     bits upward if that lowers the bubble objective;
+  3. recurse into virtual blocks crossing the best cuts: per hop, each
+     internal branch is cut independently at a shared flop-ratio grid
+     (this is what turns the O(c^n) joint branch search into O(c·n));
   4. keep the argmin of Eq. 6 subject to Eq. 1/3/4.
 
 Every candidate is scored with the executable event semantics in
-``repro.core.schedule`` (no closed-form approximations), so the chosen
-strategy is exactly what the pipeline executor will see.
+``repro.core.schedule`` / ``repro.core.sim`` (no closed-form
+approximations), so the chosen strategy is exactly what the pipeline
+executor will see.  The classic end->cloud search (``coach_offline``) is
+the ``n_hops = 1`` case of ``coach_offline_multihop``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.costs import DeviceProfile, LinkProfile, LayerNode, ModelGraph
-from repro.core.schedule import Edge, PartitionDecision, StageTimes, evaluate_partition
+from repro.core.schedule import (Edge, PartitionDecision, StageTimes,
+                                 evaluate_multihop, evaluate_partition)
 
 AccOracle = Callable[[LayerNode, int], float]  # (node, bits) -> accuracy loss
 
@@ -121,6 +127,29 @@ def chain_flow(graph: ModelGraph,
     return elems
 
 
+def chain_prefixes(graph: ModelGraph,
+                   elems: Optional[List[ChainElem]] = None
+                   ) -> List[Tuple[int, ...]]:
+    """Cumulative node-id prefixes after each chain element (first entry is
+    the empty prefix = everything downstream)."""
+    elems = elems if elems is not None else chain_flow(graph)
+    prefixes: List[Tuple[int, ...]] = [()]
+    cur: List[int] = []
+    for e in elems:
+        cur.extend(e.ids())
+        prefixes.append(tuple(cur))
+    return prefixes
+
+
+def strided_positions(n_prefixes: int, stride: int) -> List[int]:
+    """Chain-cut grid subsampled at ``stride``, always keeping the full
+    (all-nodes) prefix so degenerate cuts stay reachable."""
+    positions = list(range(0, n_prefixes, max(1, stride)))
+    if positions[-1] != n_prefixes - 1:
+        positions.append(n_prefixes - 1)
+    return positions
+
+
 # ---------------------------------------------------------------- optimizer
 @dataclasses.dataclass
 class OfflineResult:
@@ -141,24 +170,26 @@ def _quantize_boundary(graph: ModelGraph, end_set: frozenset, eps: float,
     return bits
 
 
-def _score(graph, end_set, bits, end_dev, cloud_dev, link, T_max):
-    dec = PartitionDecision(end_set=frozenset(end_set), bits=bits)
-    st = evaluate_partition(graph, dec, end_dev, cloud_dev, link)
-    feasible = (st.T_e + st.T_t + st.T_c <= T_max) and \
-        st.satisfies_parallel_constraint()
+def _score(graph, frontiers: Sequence[frozenset],
+           hop_bits: Sequence[Dict[Edge, int]], devices, links, T_max):
+    dec = PartitionDecision.multihop(frontiers, hop_bits)
+    st = evaluate_multihop(graph, dec, devices, links)
+    feasible = (st.stage_sum <= T_max) and st.satisfies_parallel_constraint()
     return dec, st, st.objective(), feasible
 
 
-def _relax_bits(graph, end_set, bits_min, end_dev, cloud_dev, link, T_max,
+def _relax_bits(graph, frontiers, bits_min, devices, links, T_max,
                 hi_bits=16):
     """Offline Eq.11 analogue: raising precision above the Eq.1 minimum is
     free accuracy margin whenever transmission is not the bottleneck."""
-    best = _score(graph, end_set, dict(bits_min), end_dev, cloud_dev, link, T_max)
+    best = _score(graph, frontiers, [dict(b) for b in bits_min],
+                  devices, links, T_max)
     cands = 1
-    if bits_min:
+    if any(bits_min):
         for extra in (1, 2, 4, 8):
-            trial = {e: min(hi_bits, b + extra) for e, b in bits_min.items()}
-            cand = _score(graph, end_set, trial, end_dev, cloud_dev, link, T_max)
+            trial = [{e: min(hi_bits, b + extra) for e, b in bm.items()}
+                     for bm in bits_min]
+            cand = _score(graph, frontiers, trial, devices, links, T_max)
             cands += 1
             # extra precision may only fill *idle* link time: it must not
             # raise the pipeline ceiling (else Eq.5's B_t is being gamed)
@@ -168,71 +199,111 @@ def _relax_bits(graph, end_set, bits_min, end_dev, cloud_dev, link, T_max,
     return best, cands
 
 
+def _branch_ratio_cut(graph: ModelGraph, branches, r: float) -> List[int]:
+    """Cut every branch of a virtual block at flop-ratio ``r`` (shared grid
+    point: the O(c·n) joint branch search of Alg. 1 l.13-14)."""
+    take_ids: List[int] = []
+    for br in branches:
+        if not br:
+            continue
+        total = sum(graph.node(x).flops for x in br)
+        acc = 0.0
+        for x in br:
+            if total == 0 or (acc + graph.node(x).flops) / max(total, 1e-12) \
+                    <= r + 1e-12:
+                take_ids.append(x)
+                acc += graph.node(x).flops
+            else:
+                break
+    return take_ids
+
+
+def coach_offline_multihop(graph: ModelGraph,
+                           devices: Sequence[DeviceProfile],
+                           links: Sequence[LinkProfile],
+                           eps: float = 0.005, T_max: float = math.inf,
+                           oracle: AccOracle = analytic_acc_loss,
+                           ratio_grid: int = 8,
+                           min_end_nodes: int = 1,
+                           chain_stride: int = 1) -> OfflineResult:
+    """Algorithm 1 offline component over an ``len(links)``-hop chain of
+    devices (end, edge tiers..., cloud).
+
+    ``min_end_nodes``: COACH's workflow (Fig. 3) requires the end device to
+    produce intermediate data — both for privacy and because the online
+    component's task features F are GAP'd from it — so the degenerate
+    all-cloud partition is excluded by default.  ``chain_stride``
+    subsamples the chain-cut grid for large graphs × many hops (the block
+    recursion still refines around the best coarse cuts).
+    """
+    n_hops = len(links)
+    assert len(devices) == n_hops + 1, "need one device per segment"
+    elems = chain_flow(graph)
+    prefixes = chain_prefixes(graph, elems)
+    n_cands = 0
+    best: Optional[Tuple] = None
+
+    def consider(frontier_ids: Sequence[Tuple[int, ...]]):
+        nonlocal best, n_cands
+        frontiers = [frozenset(f) for f in frontier_ids]
+        if len(frontiers[0]) < min_end_nodes:
+            return
+        prev: frozenset = frozenset()
+        for f in frontiers:
+            if not prev <= f or not graph.valid_end_set(f):
+                return
+            prev = f
+        bits_min = [_quantize_boundary(graph, f, eps, oracle)
+                    for f in frontiers]
+        (dec, st, obj, feas), c = _relax_bits(
+            graph, frontiers, bits_min, devices, links, T_max)
+        n_cands += c
+        key = (not feas, obj)
+        if best is None or key < (not best[3], best[2]):
+            best = (dec, st, obj, feas)
+
+    # ---- chain-level multi-cuts: non-decreasing tuples of chain positions
+    # (cut after element i; position 0 => nothing upstream of that hop)
+    positions = strided_positions(len(prefixes), chain_stride)
+    for combo in itertools.combinations_with_replacement(positions, n_hops):
+        consider([prefixes[i] for i in combo])
+
+    assert best is not None, "no valid partition candidate"
+    chain_best_cuts: Tuple[frozenset, ...] = best[0].cuts
+
+    # ---- recurse into virtual blocks: refine each hop's cut inside the
+    # blocks at a shared flop-ratio grid, holding the other hops at their
+    # best chain-level frontiers (Alg.1 l.13-14)
+    for k in range(n_hops):
+        prefix: List[int] = []
+        for e in elems:
+            if e.is_block and e.branches:
+                base = tuple(prefix)  # everything before the block upstream
+                for g in range(1, ratio_grid):
+                    r = g / ratio_grid
+                    cut_ids = list(base) + _branch_ratio_cut(
+                        graph, e.branches, r)
+                    refined = [set(c) for c in chain_best_cuts]
+                    refined[k] = frozenset(cut_ids)
+                    consider(refined)
+            prefix.extend(e.ids())
+
+    dec, st, obj, feas = best
+    return OfflineResult(decision=dec, times=st, objective=obj,
+                         candidates=n_cands, feasible=feas)
+
+
 def coach_offline(graph: ModelGraph, end_dev: DeviceProfile,
                   cloud_dev: DeviceProfile, link: LinkProfile,
                   eps: float = 0.005, T_max: float = math.inf,
                   oracle: AccOracle = analytic_acc_loss,
                   ratio_grid: int = 8,
                   min_end_nodes: int = 1) -> OfflineResult:
-    """Algorithm 1 offline component.
-
-    ``min_end_nodes``: COACH's workflow (Fig. 3) requires the end device to
-    produce intermediate data — both for privacy and because the online
-    component's task features F are GAP'd from it — so the degenerate
-    all-cloud partition is excluded by default.
-    """
-    elems = chain_flow(graph)
-    n_cands = 0
-    best: Optional[Tuple] = None
-
-    def consider(end_ids):
-        nonlocal best, n_cands
-        end_set = frozenset(end_ids)
-        if len(end_set) < min_end_nodes:
-            return
-        if not graph.valid_end_set(end_set):
-            return
-        bits_min = _quantize_boundary(graph, end_set, eps, oracle)
-        (dec, st, obj, feas), c = _relax_bits(
-            graph, end_set, bits_min, end_dev, cloud_dev, link, T_max)
-        n_cands += c
-        key = (not feas, obj)
-        if best is None or key < (not best[3], best[2]):
-            best = (dec, st, obj, feas)
-
-    # ---- chain-level cuts (cut after element i; i = -1 => all on cloud)
-    prefix: List[int] = []
-    consider(())
-    for i, e in enumerate(elems):
-        prefix.extend(e.ids())
-        consider(tuple(prefix))
-
-    # ---- recurse into virtual blocks: cut inside the block (Alg.1 l.13-14)
-    prefix = []
-    for e in elems:
-        if e.is_block and e.branches:
-            base = tuple(prefix)  # everything before the block on the end
-            for g in range(1, ratio_grid):
-                r = g / ratio_grid
-                cut_ids = list(base)
-                for br in e.branches:
-                    if not br:
-                        continue
-                    total = sum(graph.node(x).flops for x in br)
-                    acc, take = 0.0, []
-                    for x in br:
-                        if total == 0 or (acc + graph.node(x).flops) / max(total, 1e-12) <= r + 1e-12:
-                            take.append(x)
-                            acc += graph.node(x).flops
-                        else:
-                            break
-                    cut_ids.extend(take)
-                consider(tuple(cut_ids))
-        prefix.extend(e.ids())
-
-    dec, st, obj, feas = best
-    return OfflineResult(decision=dec, times=st, objective=obj,
-                         candidates=n_cands, feasible=feas)
+    """Classic end->cloud offline search: ``n_hops = 1`` of the multi-hop
+    divide-and-conquer."""
+    return coach_offline_multihop(
+        graph, (end_dev, cloud_dev), (link,), eps=eps, T_max=T_max,
+        oracle=oracle, ratio_grid=ratio_grid, min_end_nodes=min_end_nodes)
 
 
 # ------------------------------------------------------- brute-force oracle
@@ -253,7 +324,7 @@ def brute_force(graph: ModelGraph, end_dev, cloud_dev, link,
             continue
         bits = _quantize_boundary(graph, end_ids, eps, oracle)
         (dec, st, obj, feas), c = _relax_bits(
-            graph, end_ids, bits, end_dev, cloud_dev, link, T_max)
+            graph, [end_ids], [bits], (end_dev, cloud_dev), (link,), T_max)
         cands += c
         key = (not feas, obj)
         if best is None or key < (not best[3], best[2]):

@@ -1,26 +1,29 @@
 """Continuous-task pipeline executor (discrete-event).
 
-Three serial resources — end device, link, cloud — process a stream of
-tasks (Fig. 2).  Per task the stage durations come from the offline
-partition's ``StageTimes``; the online component may override transmission
-bits (adaptive quantization) or skip transmission+cloud entirely (early
-exit).  Intra-task layer parallelism is honoured through the
-``first_tx_offset`` / ``cloud_start_offset`` offsets measured by the
-single-task event simulation, i.e. a task's transmission can begin before
-its end-compute finishes (Fig. 4 virtual-block overlap).
+``2n+1`` serial resources — end device, per-hop links, intermediate edge
+tiers, cloud — process a stream of tasks (Fig. 2); the paper's 3-resource
+testbed is ``n_hops = 1``.  Per task the stage durations come from the
+offline partition's ``StageTimes``; the online component may override
+transmission bits (adaptive quantization) or skip everything past the end
+device (early exit).  Intra-task layer parallelism is honoured through
+per-hop tx/rx offsets measured by the single-task event simulation (Fig. 4
+virtual-block overlap).  The event loop itself lives in
+``repro.core.sim.simulate_stream`` — the same core that scores offline
+partitions — so planning and replay share one semantics.
 
-Outputs latency, throughput, and explicit bubble accounting (idle time on
-the link and cloud within the active window) — the quantities COACH is
-designed to minimize.
+Outputs latency, throughput, and explicit per-resource bubble accounting
+(idle time within the active window) — the quantities COACH is designed to
+minimize.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core import sim
 from repro.core.costs import LinkProfile
 from repro.core.schedule import StageTimes
 
@@ -29,16 +32,58 @@ from repro.core.schedule import StageTimes
 class TaskPlan:
     """Per-task pipeline occupation.
 
-    ``tx_offset``/``cloud_offset`` express intra-task overlap measured by the
-    single-task event simulation (Fig. 4).  None (default) means strictly
-    serial stages: transmission starts after end compute, cloud after the
-    transmission completes."""
+    The classic 3-stage form sets ``t_end``/``t_tx``/``t_cloud`` (+
+    optional overlap offsets); ``multihop`` builds the general form whose
+    per-segment/per-hop durations live in ``compute``/``tx``.  Offsets
+    express intra-task overlap measured by the single-task event
+    simulation (Fig. 4); ``None`` means strictly serial stages."""
     t_end: float
     t_tx: float
     t_cloud: float
     early_exit: bool = False
     tx_offset: Optional[float] = None    # end-start -> tx can start
     cloud_offset: Optional[float] = None  # tx-start  -> cloud can start
+    # ---- generalized N-hop form (empty => classic 3-stage)
+    compute: Tuple[float, ...] = ()
+    tx: Tuple[float, ...] = ()
+    tx_offsets: Tuple[Optional[float], ...] = ()
+    rx_offsets: Tuple[Optional[float], ...] = ()
+
+    @classmethod
+    def multihop(cls, compute: Sequence[float], tx: Sequence[float],
+                 tx_offsets: Optional[Sequence[Optional[float]]] = None,
+                 rx_offsets: Optional[Sequence[Optional[float]]] = None,
+                 early_exit: bool = False) -> "TaskPlan":
+        compute, tx = tuple(compute), tuple(tx)
+        assert len(compute) == len(tx) + 1
+        return cls(t_end=compute[0], t_tx=tx[0] if tx else 0.0,
+                   t_cloud=compute[-1], early_exit=early_exit,
+                   compute=compute, tx=tx,
+                   tx_offsets=tuple(tx_offsets) if tx_offsets else (None,) * len(tx),
+                   rx_offsets=tuple(rx_offsets) if rx_offsets else (None,) * len(tx))
+
+    @property
+    def n_hops(self) -> int:
+        return len(self.tx) if self.tx else 1
+
+    def as_sim_plan(self, n_hops: int) -> sim.SimPlan:
+        """Normalize to ``n_hops`` stages (shorter plans pad with zeros —
+        an early-exited or shallower task simply never occupies the extra
+        resources)."""
+        if self.compute:
+            comp, tx = list(self.compute), list(self.tx)
+            txo, rxo = list(self.tx_offsets), list(self.rx_offsets)
+        else:
+            comp, tx = [self.t_end, self.t_cloud], [self.t_tx]
+            txo, rxo = [self.tx_offset], [self.cloud_offset]
+        while len(tx) < n_hops:
+            tx.append(0.0)
+            comp.append(0.0)
+            txo.append(None)
+            rxo.append(None)
+        return sim.SimPlan(compute=tuple(comp), tx=tuple(tx),
+                           tx_offset=tuple(txo), rx_offset=tuple(rxo),
+                           early_exit=self.early_exit)
 
 
 @dataclasses.dataclass
@@ -54,9 +99,25 @@ class TaskRecord:
 class PipelineResult:
     tasks: List[TaskRecord]
     makespan: float
-    end_busy: float
-    link_busy: float
-    cloud_busy: float
+    compute_busy: Tuple[float, ...]
+    link_busy_hops: Tuple[float, ...]
+
+    # ---- classic 3-resource views
+    @property
+    def end_busy(self) -> float:
+        return self.compute_busy[0]
+
+    @property
+    def link_busy(self) -> float:
+        return float(sum(self.link_busy_hops))
+
+    @property
+    def cloud_busy(self) -> float:
+        return self.compute_busy[-1]
+
+    @property
+    def n_hops(self) -> int:
+        return len(self.link_busy_hops)
 
     @property
     def mean_latency(self) -> float:
@@ -74,9 +135,19 @@ class PipelineResult:
     def exit_ratio(self) -> float:
         return float(np.mean([t.early_exit for t in self.tasks]))
 
-    def bubble_fraction(self, stage: str = "cloud") -> float:
-        busy = {"end": self.end_busy, "link": self.link_busy,
+    def stage_busy(self, stage: Union[str, Tuple[str, int]]) -> float:
+        """Busy time of one resource: "end"/"link"/"cloud" (classic view)
+        or ("compute", k) / ("link", k) for the general pipeline."""
+        if isinstance(stage, tuple):
+            kind, k = stage
+            return self.compute_busy[k] if kind == "compute" \
+                else self.link_busy_hops[k]
+        return {"end": self.end_busy, "link": self.link_busy,
                 "cloud": self.cloud_busy}[stage]
+
+    def bubble_fraction(self, stage: Union[str, Tuple[str, int]] = "cloud"
+                        ) -> float:
+        busy = self.stage_busy(stage)
         return 1.0 - busy / self.makespan if self.makespan > 0 else 0.0
 
 
@@ -85,53 +156,43 @@ def plan_from_stage_times(st: StageTimes, early_exit: bool = False,
     """bits_scale rescales transmission time (online quant adjustment)."""
     if early_exit:
         return TaskPlan(st.T_e, 0.0, 0.0, True)
-    return TaskPlan(st.T_e, st.T_t * bits_scale, st.T_c,
-                    tx_offset=min(st.first_tx_offset, st.T_e),
-                    cloud_offset=st.cloud_start_offset)
+    if st.n_hops == 1:
+        return TaskPlan(st.T_e, st.T_t * bits_scale, st.T_c,
+                        tx_offset=min(st.first_tx_offset, st.T_e),
+                        cloud_offset=st.cloud_start_offset)
+    return TaskPlan.multihop(
+        compute=st.compute,
+        tx=tuple(t * bits_scale for t in st.link),
+        tx_offsets=tuple(min(st.tx_offsets[k], st.compute[k])
+                         for k in range(st.n_hops)),
+        rx_offsets=st.rx_offsets)
 
 
 def run_pipeline(plans: Sequence[TaskPlan],
                  arrivals: Optional[Sequence[float]] = None,
                  arrival_period: float = 0.0,
-                 link: Optional[LinkProfile] = None) -> PipelineResult:
-    """Execute the task stream.  If ``link`` has a bandwidth trace, each
-    task's transmission time is re-integrated at its actual start time
-    (dynamic networks, Fig. 5)."""
+                 link: Optional[LinkProfile] = None,
+                 links: Optional[Sequence[Optional[LinkProfile]]] = None
+                 ) -> PipelineResult:
+    """Execute the task stream.  ``link`` (classic) or ``links`` (one per
+    hop) with a bandwidth trace re-integrates each task's transmission
+    time at its actual start time (dynamic networks, Fig. 5)."""
     n = len(plans)
     if arrivals is None:
         arrivals = [i * arrival_period for i in range(n)]
-    end_free = link_free = cloud_free = 0.0
-    end_busy = link_busy = cloud_busy = 0.0
-    recs: List[TaskRecord] = []
-    for i, (p, arr) in enumerate(zip(plans, arrivals)):
-        e_start = max(arr, end_free)
-        e_done = e_start + p.t_end
-        end_free = e_done
-        end_busy += p.t_end
-        if p.early_exit:
-            recs.append(TaskRecord(i, arr, e_done, e_done - arr, True))
-            continue
-        tx_ready = e_done if p.tx_offset is None or p.tx_offset >= p.t_end \
-            else e_start + p.tx_offset
-        t_start = max(tx_ready, link_free)
-        t_dur = p.t_tx
-        if link is not None and link.trace is not None and p.t_tx > 0:
-            # re-integrate the same bit volume under the live trace
-            bits = p.t_tx * link.bandwidth_bps
-            t_dur = link.transfer_time(bits, t_start)
-        t_done = t_start + t_dur
-        link_free = t_done
-        link_busy += t_dur
-        c_ready = t_done if p.cloud_offset is None \
-            else max(t_start + p.cloud_offset, tx_ready)
-        c_start = max(c_ready, cloud_free)
-        # cloud cannot finish before all data has arrived
-        c_done = max(c_start + p.t_cloud, t_done)
-        cloud_free = c_done
-        cloud_busy += p.t_cloud
-        recs.append(TaskRecord(i, arr, c_done, c_done - arr, False))
-    makespan = max(r.done for r in recs) - min(r.arrival for r in recs)
-    return PipelineResult(recs, makespan, end_busy, link_busy, cloud_busy)
+    if links is None:
+        links = [link]
+    # the deployment's links set the resource count floor: a stream of
+    # early-exited (1-hop) plans on a 3-tier deployment still accounts
+    # every tier's (idle) resources
+    n_hops = max(max(p.n_hops for p in plans), len(links))
+    res = sim.simulate_stream([p.as_sim_plan(n_hops) for p in plans],
+                              arrivals, links=links)
+    recs = [TaskRecord(i, arr, d, d - arr, ee)
+            for i, (arr, d, ee) in enumerate(zip(res.arrivals, res.done,
+                                                 res.early_exit))]
+    return PipelineResult(recs, res.makespan, res.compute_busy,
+                          res.link_busy)
 
 
 def bandwidth_step_trace(steps: Sequence[tuple]) -> Callable[[float], float]:

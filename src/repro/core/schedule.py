@@ -1,23 +1,27 @@
-"""Single-task stage-time evaluation (grounds Eq. 2–5 in an executable
+"""Single-task stage-time evaluation (grounds Eq. 2-5 in an executable
 event semantics).
 
-Given a partition (end set + per-boundary-edge quant bits), simulate one
-task through: serial end-device execution -> FIFO link transfers (each
-boundary tensor becomes transmissible when its producer finishes) -> serial
-cloud execution gated on received tensors.  From the resulting timeline we
-extract the paper's quantities:
+Given a partition — classically an end set + per-boundary-edge quant bits,
+generally an ordered multi-cut over ``n_hops + 1`` devices — simulate one
+task through the alternating compute/link resources of
+``repro.core.sim`` and extract the paper's quantities:
 
-  T_e, T_t, T_c        stage busy times (Eq. 2)
-  T_t_par              transmission overlapped with end compute   (Fig. 4)
-  T_c_par              cloud compute overlapped with transmission (Fig. 4)
-  B_c, B_t             bubble functions (Eq. 5)
+  T_e, T_t, T_c        stage busy times (Eq. 2); per-hop in ``compute``/``link``
+  T_t_par              transmission overlapped with upstream compute (Fig. 4)
+  T_c_par              downstream compute overlapped with transmission
+  B_c, B_t             bubble functions (Eq. 5), summed over hops
+
+The classic end->link->cloud evaluation (``evaluate_partition``) is the
+``n_hops = 1`` case of ``evaluate_multihop``; both delegate to the shared
+event core in ``repro.core.sim``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, FrozenSet, List, Tuple
+from typing import Dict, FrozenSet, List, Sequence, Tuple
 
+from repro.core import sim
 from repro.core.costs import DeviceProfile, LinkProfile, ModelGraph
 
 Edge = Tuple[int, int]
@@ -25,9 +29,53 @@ Edge = Tuple[int, int]
 
 @dataclasses.dataclass(frozen=True)
 class PartitionDecision:
+    """A partition of the model DAG across ``n_hops + 1`` devices.
+
+    The classic 2-device form sets ``end_set``/``bits`` only.  The general
+    form is an ordered multi-cut: ``frontiers`` is a nested chain of
+    downward-closed node sets ``F_1 ⊆ F_2 ⊆ ...`` (device ``k`` runs
+    ``F_{k+1} - F_k``; the last device runs the rest), and ``hop_bits[k]``
+    holds the quantization precision of every boundary tensor crossing
+    link ``k``.  ``end_set``/``bits`` always mirror the first frontier/hop
+    for backward compatibility."""
     end_set: FrozenSet[int]
-    bits: Dict[Edge, int]  # quantization precision per boundary edge
+    bits: Dict[Edge, int]  # quantization precision per hop-0 boundary edge
     name: str = "coach"
+    frontiers: Tuple[FrozenSet[int], ...] = ()
+    hop_bits: Tuple[Dict[Edge, int], ...] = ()
+
+    @classmethod
+    def multihop(cls, frontiers: Sequence[FrozenSet[int]],
+                 hop_bits: Sequence[Dict[Edge, int]],
+                 name: str = "coach") -> "PartitionDecision":
+        frontiers = tuple(frozenset(f) for f in frontiers)
+        hop_bits = tuple(dict(b) for b in hop_bits)
+        assert len(frontiers) == len(hop_bits) >= 1
+        return cls(end_set=frontiers[0], bits=hop_bits[0], name=name,
+                   frontiers=frontiers, hop_bits=hop_bits)
+
+    @property
+    def cuts(self) -> Tuple[FrozenSet[int], ...]:
+        return self.frontiers if self.frontiers else (self.end_set,)
+
+    @property
+    def all_hop_bits(self) -> Tuple[Dict[Edge, int], ...]:
+        return self.hop_bits if self.hop_bits else (self.bits,)
+
+    @property
+    def n_hops(self) -> int:
+        return len(self.cuts)
+
+    def segments(self, graph: ModelGraph) -> List[frozenset]:
+        """Ordered per-device node sets (length ``n_hops + 1``)."""
+        cuts = self.cuts
+        segs, prev = [], frozenset()
+        for f in cuts:
+            assert prev <= f, "frontiers not nested"
+            segs.append(f - prev)
+            prev = f
+        segs.append(frozenset(n.id for n in graph.nodes) - prev)
+        return segs
 
     def boundary_bits_total(self, graph: ModelGraph) -> float:
         total = 0.0
@@ -39,6 +87,12 @@ class PartitionDecision:
 
 @dataclasses.dataclass
 class StageTimes:
+    """Stage busy times / overlaps of one simulated task.
+
+    The first eight fields are the classic 3-resource view (and remain
+    exact for ``n_hops = 1``); the tuple fields carry the generalized
+    per-resource view.  For multi-hop timelines ``T_t`` is the total link
+    busy time and ``T_c`` the last (cloud) segment."""
     T_e: float
     T_t: float
     T_c: float
@@ -47,116 +101,109 @@ class StageTimes:
     latency: float           # single-task end-to-end
     first_tx_offset: float   # end-start -> first boundary tensor ready
     cloud_start_offset: float  # first tx start -> cloud can begin
+    # ---- generalized N-hop view (empty tuples => classic 2-segment case)
+    compute: Tuple[float, ...] = ()
+    link: Tuple[float, ...] = ()
+    link_par: Tuple[float, ...] = ()
+    compute_par: Tuple[float, ...] = ()
+    tx_offsets: Tuple[float, ...] = ()   # per hop, relative to its segment start
+    rx_offsets: Tuple[float, ...] = ()   # per hop, relative to its tx start
+
+    def __post_init__(self):
+        if not self.compute:
+            self.compute = (self.T_e, self.T_c)
+            self.link = (self.T_t,)
+            self.link_par = (self.T_t_par,)
+            self.compute_par = (self.T_c_par,)
+            self.tx_offsets = (self.first_tx_offset,)
+            self.rx_offsets = (self.cloud_start_offset,)
+
+    @classmethod
+    def from_timeline(cls, tl: sim.TaskTimeline) -> "StageTimes":
+        tx_rel = tuple(max(0.0, tl.first_tx[k] - tl.seg_start[k])
+                       for k in range(tl.n_hops))
+        rx_rel = tuple(max(0.0, tl.next_start[k] - tl.first_tx[k])
+                       for k in range(tl.n_hops))
+        return cls(
+            T_e=tl.compute_busy[0], T_t=sum(tl.link_busy),
+            T_c=tl.compute_busy[-1],
+            T_t_par=sum(tl.link_par), T_c_par=sum(tl.compute_par),
+            latency=tl.latency,
+            first_tx_offset=tl.first_tx[0],
+            cloud_start_offset=rx_rel[0],
+            compute=tl.compute_busy, link=tl.link_busy,
+            link_par=tl.link_par, compute_par=tl.compute_par,
+            tx_offsets=tx_rel, rx_offsets=rx_rel)
+
+    @property
+    def n_hops(self) -> int:
+        return len(self.link)
 
     @property
     def B_c(self) -> float:
-        return abs(self.T_e - self.T_c)
+        """Eq. 5 compute bubble, summed over adjacent compute pairs."""
+        return sum(abs(self.compute[k] - self.compute[k + 1])
+                   for k in range(self.n_hops))
 
     @property
     def B_t(self) -> float:
-        m = max(self.T_e, self.T_t - self.T_t_par, self.T_c - self.T_c_par)
-        return abs(self.T_t - m)
+        """Eq. 5 transmission bubble, per hop against its effective ceiling."""
+        tot = 0.0
+        for k in range(self.n_hops):
+            m = max(self.compute[k],
+                    self.link[k] - self.link_par[k],
+                    self.compute[k + 1] - self.compute_par[k])
+            tot += abs(self.link[k] - m)
+        return tot
 
     @property
     def max_stage(self) -> float:
-        return max(self.T_e, self.T_t, self.T_c)
+        return max(self.compute + self.link)
+
+    @property
+    def stage_sum(self) -> float:
+        """Serial sum of all stage times (Eq. 3 latency budget input)."""
+        return sum(self.compute) + sum(self.link)
 
     def objective(self) -> float:
-        """Eq. 6: B_c + B_t + max{T_e, T_t, T_c}."""
+        """Eq. 6: B_c + B_t + max stage (bubble sums over hops)."""
         return self.B_c + self.B_t + self.max_stage
 
     def satisfies_parallel_constraint(self) -> bool:
-        """Eq. 4 (tolerance for float noise)."""
-        return self.T_t_par + self.T_c_par <= self.max_stage * (1 + 1e-9)
+        """Eq. 4 per hop (tolerance for float noise)."""
+        m = self.max_stage * (1 + 1e-9)
+        return all(self.link_par[k] + self.compute_par[k] <= m
+                   for k in range(self.n_hops))
 
 
-def _overlap(intervals_a: List[Tuple[float, float]],
-             intervals_b: List[Tuple[float, float]]) -> float:
-    tot, j = 0.0, 0
-    for (a0, a1) in intervals_a:
-        for (b0, b1) in intervals_b:
-            lo, hi = max(a0, b0), min(a1, b1)
-            if hi > lo:
-                tot += hi - lo
-    return tot
+def evaluate_multihop(graph: ModelGraph, decision: PartitionDecision,
+                      devices: Sequence[DeviceProfile],
+                      links: Sequence[LinkProfile],
+                      input_bits_per_elem: int = 8) -> StageTimes:
+    """Simulate one task through an ordered multi-cut partition over
+    ``len(links) + 1`` devices (shared event core: ``repro.core.sim``)."""
+    cuts = decision.cuts
+    assert len(links) == len(cuts), \
+        f"decision has {len(cuts)} hops but {len(links)} links given"
+    assert len(devices) == len(links) + 1
+    prev = frozenset()
+    for f in cuts:
+        assert graph.valid_end_set(f), "frontier not downward-closed"
+        assert prev <= f, "frontiers not nested"
+        prev = f
+    segments = decision.segments(graph)
+    tl = sim.simulate_partitioned_task(
+        graph, segments, decision.all_hop_bits, devices, links,
+        input_bits_per_elem=input_bits_per_elem)
+    return StageTimes.from_timeline(tl)
 
 
 def evaluate_partition(graph: ModelGraph, decision: PartitionDecision,
                        end_dev: DeviceProfile, cloud_dev: DeviceProfile,
                        link: LinkProfile,
                        input_bits_per_elem: int = 8) -> StageTimes:
-    end_set = decision.end_set
-    assert graph.valid_end_set(end_set), "end set not downward-closed"
-
-    # ---------------- end device: serial, topological (id) order ----------
-    t = 0.0
-    end_done: Dict[int, float] = {}
-    end_intervals: List[Tuple[float, float]] = []
-    for n in graph.nodes:
-        if n.id in end_set:
-            dt = end_dev.layer_time(n.flops, n.util)
-            end_intervals.append((t, t + dt))
-            t += dt
-            end_done[n.id] = t
-    T_e = t
-
-    # ---------------- link: FIFO over boundary tensors --------------------
-    edges = graph.boundary_edges(end_set)
-    ready: List[Tuple[float, Edge, float]] = []
-    for (u, v) in edges:
-        when = 0.0 if u < 0 else end_done[u]
-        if u < 0:
-            # raw task input (uint8 image / token ids)
-            bits = graph.input_elems * input_bits_per_elem
-        else:
-            bits = graph.node(u).out_elems * decision.bits.get((u, v), 32)
-        ready.append((when, (u, v), bits))
-    ready.sort(key=lambda r: (r[0], r[1]))
-
-    link_free = 0.0
-    recv: Dict[int, float] = {}
-    link_intervals: List[Tuple[float, float]] = []
-    T_t = 0.0
-    first_tx_start = None
-    for (when, (u, v), bits) in ready:
-        start = max(when, link_free)
-        dur = link.transfer_time(bits, start)
-        link_intervals.append((start, start + dur))
-        if first_tx_start is None:
-            first_tx_start = start
-        link_free = start + dur
-        T_t += dur
-        recv[u] = link_free  # tensor u (or input -1) fully received
-
-    # ---------------- cloud: serial, id order, gated on deps --------------
-    t = 0.0
-    cloud_done: Dict[int, float] = {}
-    cloud_intervals: List[Tuple[float, float]] = []
-    T_c = 0.0
-    for n in graph.nodes:
-        if n.id in end_set:
-            continue
-        ready_at = 0.0
-        for d in n.deps:
-            ready_at = max(ready_at,
-                           recv[d] if d in end_set else cloud_done[d])
-        if not n.deps:
-            ready_at = recv.get(-1, 0.0)
-        dt = cloud_dev.layer_time(n.flops, n.util)
-        start = max(t, ready_at)
-        cloud_intervals.append((start, start + dt))
-        t = start + dt
-        cloud_done[n.id] = t
-        T_c += dt
-
-    finish = max([T_e] + list(cloud_done.values()) + [link_free])
-    T_t_par = _overlap(link_intervals, end_intervals)
-    T_c_par = _overlap(cloud_intervals, link_intervals)
-    first_tx = first_tx_start if first_tx_start is not None else T_e
-    cloud_first = min((s for s, _ in cloud_intervals), default=first_tx)
-    return StageTimes(
-        T_e=T_e, T_t=T_t, T_c=T_c, T_t_par=T_t_par, T_c_par=T_c_par,
-        latency=finish,
-        first_tx_offset=first_tx,
-        cloud_start_offset=max(0.0, cloud_first - first_tx),
-    )
+    """Classic end->link->cloud evaluation: ``n_hops = 1`` of the general
+    machinery."""
+    assert decision.n_hops == 1, "multi-cut decision needs evaluate_multihop"
+    return evaluate_multihop(graph, decision, (end_dev, cloud_dev), (link,),
+                             input_bits_per_elem=input_bits_per_elem)

@@ -1,0 +1,327 @@
+"""Unified N-stage resource-timeline simulator.
+
+This module is the single discrete-event core behind both the offline
+partition scorer (``repro.core.schedule.evaluate_partition``) and the
+task-stream executor (``repro.core.pipeline.run_pipeline``).  A
+collaborative deployment is modelled as ``2n+1`` alternating *serial FIFO
+resources*
+
+    compute_0, link_0, compute_1, link_1, ..., link_{n-1}, compute_n
+
+where ``compute_0`` is the end device, ``compute_n`` the cloud, and the
+``compute_k`` in between are edge tiers; the paper's end->link->cloud
+testbed is the ``n = 1`` special case.  Mapping onto the paper's
+quantities (Eq. 2-6, generalized per hop ``k``):
+
+  T_e, T_t, T_c      Eq. 2 stage busy times -> ``compute[0]``, ``link[k]``,
+                     ``compute[k+1]`` (per-resource busy-interval sums).
+  Eq. 3              latency budget: the serial stage-time sum must not
+                     exceed T_max (checked by the partitioner).
+  Eq. 4              parallel constraint: within one hop, the transmission
+                     time overlapped with upstream compute (``link_par[k]``)
+                     plus the downstream compute overlapped with the
+                     transmission (``compute_par[k]``) cannot exceed the
+                     pipeline ceiling ``max_stage``.
+  Eq. 5              bubbles: B_c is the per-hop compute imbalance
+                     ``|compute[k] - compute[k+1]|``; B_t the per-hop link
+                     imbalance against the effective ceiling
+                     ``max(compute[k], link[k]-link_par[k],
+                     compute[k+1]-compute_par[k])``.
+  Eq. 6              objective = sum of bubbles + max stage, computed by
+                     ``repro.core.schedule.StageTimes`` from this timeline.
+
+Two entry points:
+
+``simulate_partitioned_task``
+    One task through a partitioned ``ModelGraph``: each segment executes
+    its nodes serially in topological (id) order; every edge whose
+    producer and consumer live in different segments becomes a boundary
+    tensor that crosses each intervening link in FIFO order (ready when
+    the producer finishes, or when the previous hop delivered it).
+    Arrivals are recorded **per edge** ``(u, v)`` — not per producer — so
+    a producer feeding several boundary edges gates each consumer on the
+    transfer it actually consumes.
+
+``simulate_stream``
+    A stream of tasks, each a ``SimPlan`` of per-segment compute
+    durations and per-hop transmission durations (with optional
+    intra-task overlap offsets measured by the single-task simulation),
+    replayed over the same ``2n+1`` serial resources.  Per-hop links with
+    a bandwidth trace re-integrate each transfer at its actual start
+    time (dynamic networks, Fig. 5).
+
+Both entry points share the same event semantics, so the partitioner
+scores candidates with exactly the timeline the stream executor replays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.costs import DeviceProfile, LinkProfile, ModelGraph
+
+Edge = Tuple[int, int]
+Interval = Tuple[float, float]
+
+
+def overlap_total(intervals_a: Sequence[Interval],
+                  intervals_b: Sequence[Interval]) -> float:
+    """Total overlap between two lists of (start, end) busy intervals."""
+    tot = 0.0
+    for (a0, a1) in intervals_a:
+        for (b0, b1) in intervals_b:
+            lo, hi = max(a0, b0), min(a1, b1)
+            if hi > lo:
+                tot += hi - lo
+    return tot
+
+
+# ===================================================================== task
+@dataclasses.dataclass
+class TaskTimeline:
+    """Resource timeline of one task through an N-segment partition.
+
+    All per-hop tuples have length ``n_hops``; per-segment tuples have
+    length ``n_hops + 1``.  Times are absolute (task starts at 0).
+    """
+    compute_busy: Tuple[float, ...]       # Eq. 2 per-segment busy time
+    link_busy: Tuple[float, ...]          # Eq. 2 per-hop busy time
+    link_par: Tuple[float, ...]           # hop tx overlapped w/ upstream compute
+    compute_par: Tuple[float, ...]        # downstream compute overlapped w/ tx
+    latency: float                        # end-to-end finish
+    first_tx: Tuple[float, ...]           # absolute first transfer start / hop
+    seg_start: Tuple[float, ...]          # absolute first compute start / segment
+    next_start: Tuple[float, ...]         # absolute first downstream compute
+                                          # start per hop (= seg_start[k+1])
+
+    @property
+    def n_hops(self) -> int:
+        return len(self.link_busy)
+
+
+def simulate_partitioned_task(
+        graph: ModelGraph,
+        segments: Sequence[frozenset],
+        hop_bits: Sequence[Dict[Edge, int]],
+        devices: Sequence[DeviceProfile],
+        links: Sequence[LinkProfile],
+        input_bits_per_elem: int = 8) -> TaskTimeline:
+    """Event-simulate one task through an ordered N-segment partition.
+
+    ``segments`` partitions the node ids into ``n_hops + 1`` ordered sets
+    (data flows strictly forward: every dependency lives in the same or an
+    earlier segment).  ``hop_bits[k]`` prices the tensors crossing link
+    ``k`` (missing edges default to fp32; the raw model input is priced at
+    ``input_bits_per_elem`` on every hop it crosses).
+    """
+    n_seg = len(segments)
+    assert len(devices) == n_seg and len(links) == n_seg - 1
+    seg_of: Dict[int, int] = {}
+    for k, seg in enumerate(segments):
+        for i in seg:
+            seg_of[i] = k
+    seg_of[-1] = 0  # raw input lives on the end device
+    for n in graph.nodes:
+        assert n.id in seg_of, f"node {n.id} unassigned"
+        for d in n.deps:
+            assert seg_of[d] <= seg_of[n.id], \
+                f"backward edge {d}->{n.id} across segments"
+
+    compute_busy: List[float] = [0.0] * n_seg
+    link_busy: List[float] = [0.0] * (n_seg - 1)
+    compute_intervals: List[List[Interval]] = [[] for _ in range(n_seg)]
+    link_intervals: List[List[Interval]] = [[] for _ in range(n_seg - 1)]
+    first_tx: List[Optional[float]] = [None] * (n_seg - 1)
+    done: Dict[int, float] = {}
+    # recv[k][(u, v)]: edge (u, v) fully delivered over link k (per-edge,
+    # not per-producer — see module docstring)
+    recv: List[Dict[Edge, float]] = [{} for _ in range(n_seg - 1)]
+    seg_finish: List[float] = [0.0] * n_seg
+    link_finish: List[float] = [0.0] * (n_seg - 1)
+
+    def edge_bits(k: int, u: int, v: int) -> float:
+        if u < 0:
+            return float(graph.input_elems) * input_bits_per_elem
+        return float(graph.node(u).out_elems) * hop_bits[k].get((u, v), 32)
+
+    # edges crossing each hop: produced at or before segment k, consumed after
+    crossing: List[List[Edge]] = [[] for _ in range(n_seg - 1)]
+    for n in graph.nodes:
+        sv = seg_of[n.id]
+        srcs = n.deps if n.deps else ((-1,) if sv > 0 else ())
+        for d in srcs:
+            for k in range(seg_of[d], sv):
+                crossing[k].append((d, n.id))
+
+    for k in range(n_seg):
+        # -------- compute segment k: serial, topological (id) order --------
+        t = 0.0
+        for n in graph.nodes:
+            if seg_of[n.id] != k:
+                continue
+            if k == 0:
+                ready_at = 0.0
+            else:
+                ready_at = 0.0
+                for d in n.deps:
+                    ready_at = max(ready_at,
+                                   done[d] if seg_of[d] == k
+                                   else recv[k - 1][(d, n.id)])
+                if not n.deps:
+                    ready_at = recv[k - 1].get((-1, n.id), 0.0)
+            dt = devices[k].layer_time(n.flops, n.util)
+            start = max(t, ready_at)
+            compute_intervals[k].append((start, start + dt))
+            t = start + dt
+            done[n.id] = t
+            compute_busy[k] += dt
+        seg_finish[k] = t
+
+        # -------- link k: FIFO over the tensors crossing this hop ----------
+        if k == n_seg - 1:
+            break
+        ready: List[Tuple[float, Edge, float]] = []
+        for (u, v) in crossing[k]:
+            if seg_of[u] == k:
+                when = done[u] if u >= 0 else 0.0
+            else:  # relayed from an earlier hop
+                when = recv[k - 1][(u, v)]
+            ready.append((when, (u, v), edge_bits(k, u, v)))
+        ready.sort(key=lambda r: (r[0], r[1]))
+        link_free = 0.0
+        for (when, (u, v), bits) in ready:
+            start = max(when, link_free)
+            dur = links[k].transfer_time(bits, start)
+            link_intervals[k].append((start, start + dur))
+            if first_tx[k] is None:
+                first_tx[k] = start
+            link_free = start + dur
+            link_busy[k] += dur
+            recv[k][(u, v)] = link_free
+        link_finish[k] = link_free
+
+    latency = max(seg_finish + link_finish) if graph.nodes else 0.0
+    link_par = tuple(overlap_total(link_intervals[k], compute_intervals[k])
+                     for k in range(n_seg - 1))
+    compute_par = tuple(overlap_total(compute_intervals[k + 1],
+                                      link_intervals[k])
+                        for k in range(n_seg - 1))
+    # fallbacks mirror the classic semantics: with nothing to transmit on a
+    # hop, "first tx" collapses to the time everything upstream finished
+    ftx: List[float] = []
+    upstream = 0.0
+    for k in range(n_seg - 1):
+        upstream = max(upstream, seg_finish[k])
+        ftx.append(first_tx[k] if first_tx[k] is not None else upstream)
+        upstream = max(upstream, link_finish[k])
+    seg_start = tuple(min((s for s, _ in compute_intervals[k]),
+                          default=(ftx[k - 1] if k else 0.0))
+                      for k in range(n_seg))
+    next_start = tuple(min((s for s, _ in compute_intervals[k + 1]),
+                           default=ftx[k])
+                       for k in range(n_seg - 1))
+    return TaskTimeline(
+        compute_busy=tuple(compute_busy), link_busy=tuple(link_busy),
+        link_par=link_par, compute_par=compute_par, latency=latency,
+        first_tx=tuple(ftx), seg_start=seg_start, next_start=next_start)
+
+
+# =================================================================== stream
+@dataclasses.dataclass
+class SimPlan:
+    """Per-task resource occupation for the stream simulator.
+
+    ``compute`` has one duration per segment, ``tx`` one per hop.
+    ``tx_offset[k]`` (if set, and smaller than ``compute[k]``) lets hop
+    ``k``'s transmission start that long after segment ``k``'s compute
+    started (Fig. 4 virtual-block overlap); ``rx_offset[k]`` lets segment
+    ``k+1`` start that long after hop ``k``'s transmission started.  An
+    early-exit task runs only segment 0."""
+    compute: Tuple[float, ...]
+    tx: Tuple[float, ...]
+    tx_offset: Tuple[Optional[float], ...] = ()
+    rx_offset: Tuple[Optional[float], ...] = ()
+    early_exit: bool = False
+
+    def __post_init__(self):
+        n_hops = len(self.tx)
+        assert len(self.compute) == n_hops + 1, "need n_hops+1 compute stages"
+        if not self.tx_offset:
+            self.tx_offset = (None,) * n_hops
+        if not self.rx_offset:
+            self.rx_offset = (None,) * n_hops
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """Per-resource accounting of a simulated task stream."""
+    arrivals: List[float]
+    done: List[float]
+    early_exit: List[bool]
+    makespan: float
+    compute_busy: Tuple[float, ...]
+    link_busy: Tuple[float, ...]
+
+
+def simulate_stream(plans: Sequence[SimPlan],
+                    arrivals: Sequence[float],
+                    links: Optional[Sequence[Optional[LinkProfile]]] = None
+                    ) -> StreamResult:
+    """Replay a task stream over the ``2n+1`` serial resources.
+
+    Tasks are admitted in order; every resource is serial FIFO.  If
+    ``links[k]`` carries a bandwidth trace, hop ``k``'s transfers are
+    re-integrated at their actual start times (the planned duration is
+    interpreted as a bit volume at the link's nominal bandwidth)."""
+    assert plans, "empty stream"
+    n_hops = len(plans[0].tx)
+    n_seg = n_hops + 1
+    compute_free = [0.0] * n_seg
+    link_free = [0.0] * n_hops
+    compute_busy = [0.0] * n_seg
+    link_busy = [0.0] * n_hops
+    done: List[float] = []
+    exits: List[bool] = []
+    for p, arr in zip(plans, arrivals):
+        assert len(p.tx) == n_hops, "mixed hop counts in one stream"
+        s = max(arr, compute_free[0])
+        d = s + p.compute[0]
+        compute_free[0] = d
+        compute_busy[0] += p.compute[0]
+        if p.early_exit:
+            done.append(d)
+            exits.append(True)
+            continue
+        prev_start, prev_done = s, d
+        for k in range(n_hops):
+            off = p.tx_offset[k]
+            tx_ready = prev_done if off is None or off >= p.compute[k] \
+                else prev_start + off
+            t_start = max(tx_ready, link_free[k])
+            t_dur = p.tx[k]
+            lk = links[k] if links is not None and k < len(links) else None
+            if lk is not None and lk.trace is not None and t_dur > 0:
+                # re-integrate the same bit volume under the live trace
+                bits = t_dur * lk.bandwidth_bps
+                t_dur = lk.transfer_time(bits, t_start)
+            t_done = t_start + t_dur
+            link_free[k] = t_done
+            link_busy[k] += t_dur
+            roff = p.rx_offset[k]
+            c_ready = t_done if roff is None \
+                else max(t_start + roff, tx_ready)
+            c_start = max(c_ready, compute_free[k + 1])
+            # downstream compute cannot finish before all data has arrived
+            c_done = max(c_start + p.compute[k + 1], t_done)
+            compute_free[k + 1] = c_done
+            compute_busy[k + 1] += p.compute[k + 1]
+            prev_start, prev_done = c_start, c_done
+        done.append(prev_done)
+        exits.append(False)
+    arrivals = list(arrivals[:len(done)])
+    makespan = max(done) - min(arrivals)
+    return StreamResult(arrivals=arrivals, done=done, early_exit=exits,
+                        makespan=makespan,
+                        compute_busy=tuple(compute_busy),
+                        link_busy=tuple(link_busy))

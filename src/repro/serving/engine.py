@@ -3,12 +3,14 @@
 Wires together every subsystem:
 
   offline   partition + quantization (core.partitioner) on the model's cost
-            graph -> a CollabRuntime split at the chosen group boundary
+            graph -> a CollabRuntime split at the chosen group boundaries
+            (one cut per hop; classic end->cloud is the single-cut case)
   frontend  task features from the end segment's boundary activation via
             the fused semantic-probe kernel (GAP + cosine + separability)
   online    early exit (Eq. 10) / adaptive precision (Eq. 11) per task
-  pipeline  3-stage discrete-event accounting of the induced stream
-            (latency / throughput / bubbles), with measured wire bytes
+  pipeline  ``2n+1``-resource discrete-event accounting of the induced
+            stream (latency / throughput / bubbles), with measured wire
+            bytes; non-exit tasks carry one ``TaskPlan`` hop per link
 
 The JAX compute is real (CollabRuntime executes both segments); the
 *timing* comes from the calibrated device/link profiles, since this host
@@ -53,10 +55,17 @@ class CoachEngine:
                  cloud_dev: DeviceProfile, n_labels: int,
                  calib_feats: np.ndarray, calib_labels: np.ndarray,
                  cfg: EngineConfig = EngineConfig(),
-                 boundary_elems: Optional[int] = None):
+                 boundary_elems: Optional[int] = None,
+                 links: Optional[Sequence[LinkProfile]] = None):
+        """``links`` (one per hop, first = the end device's uplink)
+        activates the multi-hop path; omitting it keeps the classic
+        end->link->cloud deployment with ``link`` as the only hop."""
         self.rt = runtime
         self.st = stage_times
-        self.link = link
+        self.links = list(links) if links is not None else [link]
+        self.link = self.links[0]
+        assert len(self.links) == stage_times.n_hops, \
+            "need one link per stage-time hop"
         self.cfg = cfg
         dim = calib_feats.shape[1]
         self.cache = ON.SemanticCache(n_labels, dim)
@@ -91,13 +100,26 @@ class CoachEngine:
                 wire_bits = self.sched.elems * bits
                 wire_bits_total += wire_bits
                 t_tx = wire_bits / bw
-                plans.append(TaskPlan(
-                    self.st.T_e, t_tx, self.st.T_c,
-                    tx_offset=min(self.st.first_tx_offset, self.st.T_e),
-                    cloud_offset=self.st.cloud_start_offset))
+                st = self.st
+                if st.n_hops == 1:
+                    plans.append(TaskPlan(
+                        st.T_e, t_tx, st.T_c,
+                        tx_offset=min(st.first_tx_offset, st.T_e),
+                        cloud_offset=st.cloud_start_offset))
+                else:
+                    # adaptive precision retimes the end device's uplink;
+                    # the inner hops keep their offline-planned occupation
+                    # (per-hop adaptive bits: ROADMAP open item)
+                    plans.append(TaskPlan.multihop(
+                        compute=st.compute,
+                        tx=(t_tx,) + tuple(st.link[1:]),
+                        tx_offsets=tuple(min(st.tx_offsets[k], st.compute[k])
+                                         for k in range(st.n_hops)),
+                        rx_offsets=st.rx_offsets))
                 correct.append(pred == task.label)
                 self.sched.report_label(feats, task.label)
-        pr = run_pipeline(plans, arrival_period=arrival_period, link=self.link)
+        pr = run_pipeline(plans, arrival_period=arrival_period,
+                          links=self.links)
         n = len(tasks)
         return EngineStats(
             pipeline=pr,

@@ -1,0 +1,156 @@
+"""Multi-hop generalization, end to end: offline multi-cut search,
+3-segment CollabRuntime with per-hop wire packets, and the serving engine
+over a 3-tier deployment."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.collab import CollabRuntime, split_params_multi
+from repro.core.costs import (DeviceProfile, LinkProfile, chain_graph)
+from repro.core.partitioner import coach_offline, coach_offline_multihop
+from repro.core.schedule import StageTimes
+from repro.data.pipeline import CorrelatedTaskStream, make_calibration_set
+from repro.models import model as M
+from repro.serving.engine import CoachEngine
+
+END = DeviceProfile("end", 1e9)
+EDGE = DeviceProfile("edge", 3e9)
+CLOUD = DeviceProfile("cloud", 8e9)
+UPLINK = LinkProfile("uplink", 100e6)
+BACKHAUL = LinkProfile("backhaul", 900e6)
+
+
+# ------------------------------------------------------- offline multi-cut
+def _graph(seed=0, n=12):
+    rng = np.random.RandomState(seed)
+    return chain_graph(f"g{seed}", rng.uniform(1e6, 5e7, n),
+                       rng.randint(1_000, 200_000, n))
+
+
+def test_multihop_offline_produces_nested_feasible_cut():
+    g = _graph()
+    res = coach_offline_multihop(g, (END, EDGE, CLOUD), (UPLINK, BACKHAUL))
+    dec = res.decision
+    assert dec.n_hops == 2
+    f1, f2 = dec.cuts
+    assert f1 <= f2 and g.valid_end_set(f1) and g.valid_end_set(f2)
+    segs = dec.segments(g)
+    assert len(segs) == 3
+    assert frozenset().union(*segs) == frozenset(nd.id for nd in g.nodes)
+    assert res.feasible
+    assert res.times.n_hops == 2
+
+
+def test_multihop_offline_no_worse_than_pinning_edge_to_end_cut():
+    """The 2D sweep includes every (c, c) pair, so its objective can never
+    exceed the classic 1-cut search evaluated on the 3-tier deployment."""
+    g = _graph(3)
+    res2 = coach_offline(g, END, CLOUD, UPLINK)
+    res3 = coach_offline_multihop(g, (END, EDGE, CLOUD),
+                                  (UPLINK, BACKHAUL))
+    # same machinery at n_hops=1 reproduces the classic result
+    res1 = coach_offline_multihop(g, (END, CLOUD), (UPLINK,))
+    assert abs(res1.objective - res2.objective) < 1e-12
+    assert res3.objective <= res2.objective + 1e-9 or res3.feasible
+
+
+# --------------------------------------------------- 3-segment CollabRuntime
+@pytest.fixture(scope="module")
+def rt3():
+    cfg = get_config("gemma2-2b").reduced(num_layers=8)  # 4 groups
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params, CollabRuntime(cfg, params, cut_group=(1, 3),
+                                      default_bits=(8, 8))
+
+
+def test_split_params_multi_partitions_groups(rt3):
+    cfg, params, r = rt3
+    segs = split_params_multi(params, cfg, (1, 3))
+    sizes = [jax.tree.leaves(s["groups"])[0].shape[0] for s in segs]
+    assert sizes == [1, 2, 1]
+    assert "embed" in segs[0] and "final_norm" in segs[-1]
+    assert r.n_hops == 2 and r.n_segments == 3
+
+
+def test_three_segment_matches_monolithic(rt3):
+    cfg, params, r = rt3
+    x = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    logits, packets = r.run(x)
+    assert [p.hop for p in packets] == [0, 1]
+    assert all(p.bits == 8 for p in packets)
+    ref = r.monolithic(params, x)
+    rel = float(jnp.max(jnp.abs(logits - ref)) / jnp.max(jnp.abs(ref)))
+    assert rel < 0.05, rel  # two 8-bit quantization hops
+
+
+def test_cloud_step_relays_remaining_hops(rt3):
+    cfg, params, r = rt3
+    x = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab_size)
+    logits, packets = r.run(x)
+    relayed = r.cloud_step(packets[0])  # from the end's uplink packet
+    np.testing.assert_allclose(np.asarray(relayed), np.asarray(logits),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------- engine 3-tier
+def _multihop_stage_times():
+    return StageTimes(
+        T_e=2e-3, T_t=4e-3, T_c=2e-3, T_t_par=0.0, T_c_par=0.0,
+        latency=9e-3, first_tx_offset=2e-3, cloud_start_offset=3e-3,
+        compute=(2e-3, 1.5e-3, 2e-3), link=(3e-3, 1e-3),
+        link_par=(0.0, 0.0), compute_par=(0.0, 0.0),
+        tx_offsets=(2e-3, 1.5e-3), rx_offsets=(3e-3, 1e-3))
+
+
+def test_engine_accounts_three_tier_stream():
+    st = _multihop_stage_times()
+    stream = CorrelatedTaskStream(n_labels=30, dim=48,
+                                  correlation="medium", seed=0)
+    feats, labels = make_calibration_set(stream, 400)
+    eng = CoachEngine(None, st, END, UPLINK, CLOUD, n_labels=30,
+                      calib_feats=feats, calib_labels=labels,
+                      boundary_elems=50_000, links=[UPLINK, BACKHAUL])
+
+    def classify(task):
+        d = np.linalg.norm(stream.mu - task.features[None], axis=1)
+        return task.features, int(np.argmin(d))
+
+    stats = eng.run_stream(stream.tasks(300), arrival_period=3.2e-3,
+                           classify=classify)
+    pr = stats.pipeline
+    assert pr.n_hops == 2
+    assert len(pr.compute_busy) == 3
+    assert pr.throughput > 0 and stats.accuracy > 0.7
+    for k in range(3):
+        assert pr.compute_busy[k] <= pr.makespan + 1e-9
+    # the backhaul carried the inner hop for every non-exited task
+    n_full = sum(1 for t in pr.tasks if not t.early_exit)
+    assert abs(pr.link_busy_hops[1] - n_full * st.link[1]) < 1e-9
+
+
+def test_all_early_exit_stream_keeps_deployment_resources():
+    """A 3-tier stream where every task early-exits must still account
+    all 2n+1 deployment resources (regression: hop count was inferred
+    from the plans alone and collapsed to 1)."""
+    from repro.core.pipeline import TaskPlan, run_pipeline
+
+    plans = [TaskPlan(1e-3, 0.0, 0.0, True) for _ in range(5)]
+    pr = run_pipeline(plans, arrival_period=1e-3,
+                      links=[UPLINK, BACKHAUL])
+    assert pr.n_hops == 2 and len(pr.compute_busy) == 3
+    assert pr.compute_busy[1] == pr.compute_busy[2] == 0.0
+    assert pr.bubble_fraction(("compute", 2)) == 1.0
+    assert pr.bubble_fraction(("link", 1)) == 1.0
+
+
+def test_engine_rejects_link_hop_mismatch():
+    st = _multihop_stage_times()
+    stream = CorrelatedTaskStream(n_labels=5, dim=16, seed=0)
+    feats, labels = make_calibration_set(stream, 50)
+    with pytest.raises(AssertionError):
+        CoachEngine(None, st, END, UPLINK, CLOUD, n_labels=5,
+                    calib_feats=feats, calib_labels=labels,
+                    boundary_elems=1000)  # 1 link for 2-hop stage times
