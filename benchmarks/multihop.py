@@ -2,11 +2,19 @@
 
 For ResNet101/VGG16: partition end->cloud ("2-hop": Jetson NX + A6000 over
 WiFi) and end->edge->cloud ("3-hop": AGX-Orin mid tier; WiFi uplink +
-metro-ethernet backhaul) with the same multi-hop divide-and-conquer,
-replay a steady task stream through ``run_pipeline``, and report latency /
-throughput / per-resource bubble fractions side by side.  Also emits
-``BENCH_pipeline.json`` (the perf-trajectory artifact) when an output
-directory is given.
+metro-ethernet backhaul) with the same multi-hop divide-and-conquer, then
+run a steady task stream through both realizations of the ``2n+1``
+resource chain:
+
+  engine = "sim"    ``core.pipeline.run_pipeline`` (event simulator)
+  engine = "async"  ``serving.async_engine.run_pipeline_async`` (per-
+                    resource asyncio workers on the virtual clock, with
+                    bounded hop queues — the served engine's defaults)
+
+and report latency / throughput / per-resource bubble fractions side by
+side.  Also emits ``BENCH_pipeline.json`` (the perf-trajectory artifact)
+when an output directory is given; ``benchmarks/validate_bench.py``
+checks its schema in CI.
 """
 
 from __future__ import annotations
@@ -19,10 +27,14 @@ from repro.core.costs import (A6000_SERVER, EDGE_AGX_ORIN, ETH_LAN,
 from repro.core.partitioner import coach_offline_multihop
 from repro.core.pipeline import plan_from_stage_times, run_pipeline
 from repro.models.cnn import resnet101, vgg16
+from repro.serving.async_engine import run_pipeline_async
+from repro.serving.base import EngineConfig
 
 MBPS_UPLINK = 50.0
 N_TASKS = 400
 ARRIVAL_SLACK = 1.05
+# bound the hop queues exactly the way the served engine does by default
+ASYNC_QUEUE_CAPACITY = EngineConfig().queue_capacity
 
 # n_tiers -> (devices, links); links = n_tiers - 1
 DEPLOYMENTS = {
@@ -37,16 +49,8 @@ def _resource_names(n_links: int):
     return comp, [f"link{k}" for k in range(n_links)]
 
 
-def run_deployment(graph, n_tiers: int, n_tasks: int = N_TASKS,
-                   chain_stride: int = 1) -> dict:
-    devices, links = DEPLOYMENTS[n_tiers]
-    off = coach_offline_multihop(graph, devices, links,
-                                 chain_stride=chain_stride)
-    st = off.times
-    plans = [plan_from_stage_times(st) for _ in range(n_tasks)]
-    pr = run_pipeline(plans, arrival_period=st.max_stage * ARRIVAL_SLACK,
-                      links=list(links))
-    comp_names, link_names = _resource_names(len(links))
+def _row(graph, n_tiers, engine, pr, st, objective) -> dict:
+    comp_names, link_names = _resource_names(n_tiers - 1)
     bubbles = {name: pr.bubble_fraction(("compute", k))
                for k, name in enumerate(comp_names)}
     bubbles.update({name: pr.bubble_fraction(("link", k))
@@ -54,33 +58,53 @@ def run_deployment(graph, n_tiers: int, n_tasks: int = N_TASKS,
     return {
         "model": graph.name,
         "hops": n_tiers,
-        "segments": [len(s) for s in off.decision.segments(graph)],
+        "engine": engine,
         "single_task_ms": st.latency * 1e3,
         "mean_latency_ms": pr.mean_latency * 1e3,
         "p99_latency_ms": pr.p99_latency * 1e3,
         "throughput_its": pr.throughput,
+        "makespan_ms": pr.makespan * 1e3,
         "max_stage_ms": st.max_stage * 1e3,
-        "objective_ms": off.objective * 1e3,
+        "objective_ms": objective * 1e3,
         "bubble_fraction": bubbles,
     }
 
 
+def run_deployment(graph, n_tiers: int, n_tasks: int = N_TASKS,
+                   chain_stride: int = 1) -> list:
+    devices, links = DEPLOYMENTS[n_tiers]
+    off = coach_offline_multihop(graph, devices, links,
+                                 chain_stride=chain_stride)
+    st = off.times
+    plans = [plan_from_stage_times(st) for _ in range(n_tasks)]
+    period = st.max_stage * ARRIVAL_SLACK
+    pr = run_pipeline(plans, arrival_period=period, links=list(links))
+    pa = run_pipeline_async(plans, arrival_period=period, links=list(links),
+                            queue_capacity=ASYNC_QUEUE_CAPACITY)
+    rows = [_row(graph, n_tiers, "sim", pr, st, off.objective),
+            _row(graph, n_tiers, "async", pa, st, off.objective)]
+    seg = [len(s) for s in off.decision.segments(graph)]
+    for r in rows:
+        r["segments"] = seg
+    return rows
+
+
 def run(out_dir=None, n_tasks: int = N_TASKS):
-    rows = ["multihop,model,hops,latency_ms,p99_ms,throughput_its,"
+    rows = ["multihop,engine,model,hops,latency_ms,p99_ms,throughput_its,"
             "max_stage_ms,bubble_cloud,bubble_links"]
     payload = []
     for graph, stride in ((vgg16(), 1), (resnet101(), 4)):
         for n_tiers in (2, 3):
-            r = run_deployment(graph, n_tiers, n_tasks=n_tasks,
-                               chain_stride=stride)
-            payload.append(r)
-            bl = ";".join(f"{r['bubble_fraction'][f'link{k}']:.3f}"
-                          for k in range(n_tiers - 1))
-            rows.append(
-                f"multihop,{r['model']},{r['hops']},"
-                f"{r['mean_latency_ms']:.2f},{r['p99_latency_ms']:.2f},"
-                f"{r['throughput_its']:.1f},{r['max_stage_ms']:.2f},"
-                f"{r['bubble_fraction']['cloud']:.3f},{bl}")
+            for r in run_deployment(graph, n_tiers, n_tasks=n_tasks,
+                                    chain_stride=stride):
+                payload.append(r)
+                bl = ";".join(f"{r['bubble_fraction'][f'link{k}']:.3f}"
+                              for k in range(n_tiers - 1))
+                rows.append(
+                    f"multihop,{r['engine']},{r['model']},{r['hops']},"
+                    f"{r['mean_latency_ms']:.2f},{r['p99_latency_ms']:.2f},"
+                    f"{r['throughput_its']:.1f},{r['max_stage_ms']:.2f},"
+                    f"{r['bubble_fraction']['cloud']:.3f},{bl}")
     if out_dir is not None:
         path = Path(out_dir) / "BENCH_pipeline.json"
         path.write_text(json.dumps(payload, indent=2) + "\n")

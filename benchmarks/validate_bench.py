@@ -1,0 +1,65 @@
+"""Schema validator for ``BENCH_pipeline.json`` (CI smoke gate).
+
+  python benchmarks/validate_bench.py [path/to/BENCH_pipeline.json]
+
+Checks that the perf-trajectory artifact is a non-empty list of rows,
+each carrying the required typed fields, with every (model, hops)
+deployment reported by BOTH the event simulator ("sim") and the async
+hop-queue executor ("async"), and that bubble fractions are sane.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+REQUIRED_NUMERIC = (
+    "single_task_ms", "mean_latency_ms", "p99_latency_ms",
+    "throughput_its", "makespan_ms", "max_stage_ms", "objective_ms",
+)
+ENGINES = {"sim", "async"}
+
+
+def validate(path: Path) -> list:
+    data = json.loads(path.read_text())
+    assert isinstance(data, list) and data, "payload must be a non-empty list"
+    seen = set()
+    for i, row in enumerate(data):
+        assert isinstance(row, dict), f"row {i}: not an object"
+        assert isinstance(row.get("model"), str) and row["model"], f"row {i}"
+        assert isinstance(row.get("hops"), int) and row["hops"] >= 2, \
+            f"row {i}: bad hops"
+        assert row.get("engine") in ENGINES, \
+            f"row {i}: engine must be one of {sorted(ENGINES)}"
+        for f in REQUIRED_NUMERIC:
+            v = row.get(f)
+            assert isinstance(v, (int, float)) and v >= 0, \
+                f"row {i}: bad {f}={v!r}"
+        bf = row.get("bubble_fraction")
+        assert isinstance(bf, dict) and {"end", "cloud", "link0"} <= set(bf), \
+            f"row {i}: bubble_fraction missing resources"
+        assert all(isinstance(v, (int, float)) and -1e-9 <= v <= 1 + 1e-9
+                   for v in bf.values()), f"row {i}: bubble out of [0, 1]"
+        # an n-tier deployment has n compute + (n-1) link resources
+        assert len(bf) == 2 * row["hops"] - 1, \
+            f"row {i}: expected {2 * row['hops'] - 1} resources"
+        seen.add((row["model"], row["hops"], row["engine"]))
+    deployments = {(m, h) for (m, h, _e) in seen}
+    for m, h in sorted(deployments):
+        missing = ENGINES - {e for (mm, hh, e) in seen if (mm, hh) == (m, h)}
+        assert not missing, f"{m}@{h}-hop: missing engine rows {missing}"
+    return data
+
+
+def main() -> None:
+    path = Path(sys.argv[1]) if len(sys.argv) > 1 \
+        else Path("experiments/bench/BENCH_pipeline.json")
+    rows = validate(path)
+    print(f"{path}: OK ({len(rows)} rows, "
+          f"{len({(r['model'], r['hops']) for r in rows})} deployments x "
+          f"{len({r['engine'] for r in rows})} engines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,7 @@ from repro.core.costs import (A6000_SERVER, EDGE_AGX_ORIN, ETH_LAN,
 from repro.core.partitioner import coach_offline_multihop
 from repro.data.pipeline import CorrelatedTaskStream, make_calibration_set
 from repro.models import model as M
+from repro.serving.async_engine import AsyncCoachEngine
 from repro.serving.engine import CoachEngine
 
 
@@ -54,9 +55,11 @@ def run_tier(cfg, params, graph, devices, links, stream, feats, labels,
     hop_bits = [int(np.mean(list(b.values()))) if b else 8
                 for b in off.decision.all_hop_bits]
     rt = CollabRuntime(cfg, params, cuts, default_bits=hop_bits)
-    engine = CoachEngine(rt, off.times, devices[0], links[0], devices[-1],
-                         n_labels=16, calib_feats=feats, calib_labels=labels,
-                         boundary_elems=128 * cfg.d_model, links=list(links))
+    mk_engine = lambda cls: cls(
+        rt, off.times, devices[0], links[0], devices[-1],
+        n_labels=16, calib_feats=feats, calib_labels=labels,
+        boundary_elems=128 * cfg.d_model, links=list(links),
+        hop_bits_offline=hop_bits)
 
     def classify(task):
         toks = (np.abs((task.features[:8] * 1000).astype(np.int64))
@@ -65,10 +68,14 @@ def run_tier(cfg, params, graph, devices, links, stream, feats, labels,
         logits, _packets = rt.run(inp)
         return task.features, int(np.argmax(logits[0]) % stream.n_labels)
 
-    stats = engine.run_stream(stream.tasks(requests),
-                              arrival_period=off.times.max_stage,
-                              classify=classify)
-    return off, cuts, stats
+    tasks = stream.tasks(requests)
+    stats = mk_engine(CoachEngine).run_stream(
+        list(tasks), arrival_period=off.times.max_stage, classify=classify)
+    # same stream through the async hop-queue executor (fresh engine, so
+    # the semantic cache sees an identical decision sequence)
+    astats = mk_engine(AsyncCoachEngine).run_stream(
+        list(tasks), arrival_period=off.times.max_stage, classify=classify)
+    return off, cuts, stats, astats
 
 
 def main():
@@ -95,9 +102,9 @@ def main():
                              (WIFI_5GHZ(args.bandwidth), ETH_LAN())),
     }
     for name, (devices, links) in tiers.items():
-        off, cuts, stats = run_tier(cfg, params, graph, devices, links,
-                                    stream, feats, labels,
-                                    args.requests, args.seed)
+        off, cuts, stats, astats = run_tier(cfg, params, graph, devices,
+                                            links, stream, feats, labels,
+                                            args.requests, args.seed)
         pr = stats.pipeline
         bubbles = " ".join(
             f"c{k}={pr.bubble_fraction(('compute', k)):.2f}"
@@ -113,6 +120,14 @@ def main():
         print(f"  latency mean={pr.mean_latency * 1e3:.2f}ms "
               f"p99={pr.p99_latency * 1e3:.2f}ms "
               f"thpt={pr.throughput:.1f} it/s bubbles: {bubbles}")
+        pa = astats.pipeline
+        same = (astats.exit_ratio == stats.exit_ratio
+                and astats.mean_bits == stats.mean_bits
+                and astats.accuracy == stats.accuracy)
+        print(f"  [async] latency mean={pa.mean_latency * 1e3:.2f}ms "
+              f"p99={pa.p99_latency * 1e3:.2f}ms "
+              f"thpt={pa.throughput:.1f} it/s "
+              f"decisions_match_sync={same}")
 
 
 if __name__ == "__main__":

@@ -193,6 +193,21 @@ class CollabRuntime:
             return h
         return self._quantize(h, k, bits), h
 
+    def segment_handle(self, k: int):
+        """Bound per-segment callable for hop-queue workers.
+
+        Worker ``k`` applies the handle to the payload it dequeued (the
+        raw model input for ``k = 0``, else the hop-``k-1`` ``WirePacket``)
+        and forwards the result: intermediate segments yield the hop-``k``
+        packet, the last segment yields the logits."""
+        assert 0 <= k <= self.n_hops, k
+
+        def handle(x, bits: Optional[int] = None):
+            out = self.segment_step(k, x, bits=bits)
+            return out[0] if isinstance(out, tuple) else out
+
+        return handle
+
     # ---- stage A (end device / pod 0)
     def end_step(self, inputs, bits: Optional[int] = None
                  ) -> Tuple[WirePacket, jnp.ndarray]:

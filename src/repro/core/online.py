@@ -152,21 +152,74 @@ def choose_bits(required: int, elems: int, bandwidth_bps: float,
 
 
 class OnlineScheduler:
-    """Per-task online decision pipeline (Alg. 1 online component)."""
+    """Per-task online decision pipeline (Alg. 1 online component).
+
+    ``hop_elems`` / ``stage_compute`` activate the per-hop view of the
+    adaptive-precision rule: hop ``k`` carries ``hop_elems[k]`` boundary
+    elements between compute stages ``k`` and ``k+1``, and Eq. 11 is
+    applied per hop against that pair's busy times, each hop chasing its
+    own bandwidth EMA.  Omitting them keeps the classic single-uplink
+    scheduler (hop 0 = the end device's uplink)."""
 
     def __init__(self, cache: SemanticCache, thresholds: Thresholds,
                  boundary_elems: int, T_e: float, T_c: float,
-                 update_centers: bool = True):
+                 update_centers: bool = True,
+                 hop_elems: Optional[Sequence[int]] = None,
+                 stage_compute: Optional[Sequence[float]] = None):
         self.cache = cache
         self.th = thresholds
         self.elems = boundary_elems
         self.T_e, self.T_c = T_e, T_c
         self.update_centers = update_centers
         self.bw_ema: Optional[float] = None
+        self.hop_elems: Tuple[int, ...] = tuple(int(e) for e in hop_elems) \
+            if hop_elems else (int(boundary_elems),)
+        sc = tuple(stage_compute) if stage_compute else (T_e, T_c)
+        assert len(sc) == len(self.hop_elems) + 1, \
+            "need one compute stage per hop endpoint"
+        self.stage_compute: Tuple[float, ...] = sc
+        # per-hop bandwidth EMAs for hops >= 1 (hop 0 is ``bw_ema``)
+        self.hop_bw_ema: Dict[int, float] = {}
+
+    @property
+    def n_hops(self) -> int:
+        return len(self.hop_elems)
 
     def observe_bandwidth(self, bps: float, alpha: float = 0.5):
         self.bw_ema = bps if self.bw_ema is None else \
             alpha * bps + (1 - alpha) * self.bw_ema
+
+    def observe_hop_bandwidth(self, hop: int, bps: float, alpha: float = 0.5):
+        """Per-hop bandwidth measurement (hop 0 feeds the classic EMA)."""
+        assert 0 <= hop < self.n_hops, hop
+        if hop == 0:
+            self.observe_bandwidth(bps, alpha)
+            return
+        cur = self.hop_bw_ema.get(hop)
+        self.hop_bw_ema[hop] = bps if cur is None else \
+            alpha * bps + (1 - alpha) * cur
+
+    def hop_bandwidth(self, hop: int) -> Optional[float]:
+        """Best bandwidth estimate for ``hop``; a hop whose EMA is missing
+        degrades gracefully to the end uplink's EMA (the only measurement
+        the classic engine takes)."""
+        if hop == 0:
+            return self.bw_ema
+        return self.hop_bw_ema.get(hop, self.bw_ema)
+
+    def choose_hop_bits(self, required: int,
+                        levels: Sequence[int] = (3, 4, 5, 6, 8, 12, 16)
+                        ) -> Tuple[int, ...]:
+        """Eq. 11 per hop: each ``WirePacket`` hop fills its link's idle
+        time up to the ceiling of its adjacent compute stages, using that
+        hop's own bandwidth EMA."""
+        out = []
+        for k in range(self.n_hops):
+            bw = self.hop_bandwidth(k) or 1e6
+            out.append(choose_bits(required, self.hop_elems[k], bw,
+                                   self.stage_compute[k],
+                                   self.stage_compute[k + 1], levels=levels))
+        return tuple(out)
 
     def step(self, feat: np.ndarray, bandwidth_bps: Optional[float] = None
              ) -> OnlineDecision:

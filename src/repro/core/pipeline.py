@@ -101,6 +101,10 @@ class PipelineResult:
     makespan: float
     compute_busy: Tuple[float, ...]
     link_busy_hops: Tuple[float, ...]
+    # per-resource busy intervals (from sim.StreamResult / the async
+    # executor's recorded timeline) — empty tuples when not recorded
+    compute_intervals: Tuple[Tuple[sim.Interval, ...], ...] = ()
+    link_intervals: Tuple[Tuple[sim.Interval, ...], ...] = ()
 
     # ---- classic 3-resource views
     @property
@@ -168,6 +172,18 @@ def plan_from_stage_times(st: StageTimes, early_exit: bool = False,
         rx_offsets=st.rx_offsets)
 
 
+def result_from_stream(res: sim.StreamResult) -> PipelineResult:
+    """Wrap a raw resource timeline (from ``sim.simulate_stream`` or the
+    async hop-queue executor) into the engine-facing result type."""
+    recs = [TaskRecord(i, arr, d, d - arr, ee)
+            for i, (arr, d, ee) in enumerate(zip(res.arrivals, res.done,
+                                                 res.early_exit))]
+    return PipelineResult(recs, res.makespan, res.compute_busy,
+                          res.link_busy,
+                          compute_intervals=res.compute_intervals,
+                          link_intervals=res.link_intervals)
+
+
 def run_pipeline(plans: Sequence[TaskPlan],
                  arrivals: Optional[Sequence[float]] = None,
                  arrival_period: float = 0.0,
@@ -188,11 +204,7 @@ def run_pipeline(plans: Sequence[TaskPlan],
     n_hops = max(max(p.n_hops for p in plans), len(links))
     res = sim.simulate_stream([p.as_sim_plan(n_hops) for p in plans],
                               arrivals, links=links)
-    recs = [TaskRecord(i, arr, d, d - arr, ee)
-            for i, (arr, d, ee) in enumerate(zip(res.arrivals, res.done,
-                                                 res.early_exit))]
-    return PipelineResult(recs, res.makespan, res.compute_busy,
-                          res.link_busy)
+    return result_from_stream(res)
 
 
 def bandwidth_step_trace(steps: Sequence[tuple]) -> Callable[[float], float]:

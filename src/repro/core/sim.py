@@ -94,6 +94,9 @@ class TaskTimeline:
     seg_start: Tuple[float, ...]          # absolute first compute start / segment
     next_start: Tuple[float, ...]         # absolute first downstream compute
                                           # start per hop (= seg_start[k+1])
+    # raw per-resource busy intervals (one per node / transfer, in exec order)
+    compute_intervals: Tuple[Tuple[Interval, ...], ...] = ()
+    link_intervals: Tuple[Tuple[Interval, ...], ...] = ()
 
     @property
     def n_hops(self) -> int:
@@ -224,7 +227,9 @@ def simulate_partitioned_task(
     return TaskTimeline(
         compute_busy=tuple(compute_busy), link_busy=tuple(link_busy),
         link_par=link_par, compute_par=compute_par, latency=latency,
-        first_tx=tuple(ftx), seg_start=seg_start, next_start=next_start)
+        first_tx=tuple(ftx), seg_start=seg_start, next_start=next_start,
+        compute_intervals=tuple(tuple(iv) for iv in compute_intervals),
+        link_intervals=tuple(tuple(iv) for iv in link_intervals))
 
 
 # =================================================================== stream
@@ -255,13 +260,21 @@ class SimPlan:
 
 @dataclasses.dataclass
 class StreamResult:
-    """Per-resource accounting of a simulated task stream."""
+    """Per-resource accounting of a simulated task stream.
+
+    ``compute_intervals[k]`` / ``link_intervals[k]`` are the per-resource
+    busy intervals (one ``(start, end)`` per task that occupied the
+    resource, in admission order) — the raw timeline, exposed so an
+    executor's recorded schedule can be compared against the simulator's
+    interval by interval."""
     arrivals: List[float]
     done: List[float]
     early_exit: List[bool]
     makespan: float
     compute_busy: Tuple[float, ...]
     link_busy: Tuple[float, ...]
+    compute_intervals: Tuple[Tuple[Interval, ...], ...] = ()
+    link_intervals: Tuple[Tuple[Interval, ...], ...] = ()
 
 
 def simulate_stream(plans: Sequence[SimPlan],
@@ -281,6 +294,8 @@ def simulate_stream(plans: Sequence[SimPlan],
     link_free = [0.0] * n_hops
     compute_busy = [0.0] * n_seg
     link_busy = [0.0] * n_hops
+    compute_iv: List[List[Interval]] = [[] for _ in range(n_seg)]
+    link_iv: List[List[Interval]] = [[] for _ in range(n_hops)]
     done: List[float] = []
     exits: List[bool] = []
     for p, arr in zip(plans, arrivals):
@@ -289,6 +304,7 @@ def simulate_stream(plans: Sequence[SimPlan],
         d = s + p.compute[0]
         compute_free[0] = d
         compute_busy[0] += p.compute[0]
+        compute_iv[0].append((s, d))
         if p.early_exit:
             done.append(d)
             exits.append(True)
@@ -308,6 +324,7 @@ def simulate_stream(plans: Sequence[SimPlan],
             t_done = t_start + t_dur
             link_free[k] = t_done
             link_busy[k] += t_dur
+            link_iv[k].append((t_start, t_done))
             roff = p.rx_offset[k]
             c_ready = t_done if roff is None \
                 else max(t_start + roff, tx_ready)
@@ -316,6 +333,7 @@ def simulate_stream(plans: Sequence[SimPlan],
             c_done = max(c_start + p.compute[k + 1], t_done)
             compute_free[k + 1] = c_done
             compute_busy[k + 1] += p.compute[k + 1]
+            compute_iv[k + 1].append((c_start, c_start + p.compute[k + 1]))
             prev_start, prev_done = c_start, c_done
         done.append(prev_done)
         exits.append(False)
@@ -324,4 +342,6 @@ def simulate_stream(plans: Sequence[SimPlan],
     return StreamResult(arrivals=arrivals, done=done, early_exit=exits,
                         makespan=makespan,
                         compute_busy=tuple(compute_busy),
-                        link_busy=tuple(link_busy))
+                        link_busy=tuple(link_busy),
+                        compute_intervals=tuple(tuple(iv) for iv in compute_iv),
+                        link_intervals=tuple(tuple(iv) for iv in link_iv))

@@ -1,2 +1,6 @@
-from repro.serving.engine import CoachEngine, EngineConfig, EngineStats
+from repro.serving.async_engine import (AsyncCoachEngine, AsyncHopPipeline,
+                                        HopQueue, VirtualClock, WallClock,
+                                        run_pipeline_async)
+from repro.serving.base import EngineConfig, EngineStats
+from repro.serving.engine import CoachEngine
 from repro.serving.generate import generate

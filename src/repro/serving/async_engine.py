@@ -1,0 +1,493 @@
+"""Async hop-queue serving engine: real per-resource workers, pinned to
+``core/sim``.
+
+``core.sim.simulate_stream`` models a collaborative deployment as
+``2n+1`` alternating serial FIFO resources.  This module *executes* that
+model instead of replaying it: one asyncio worker per resource, chained
+by bounded ``HopQueue``s, so segment ``k`` of task ``i`` genuinely runs
+concurrently with segment ``k-1`` of task ``i+1`` and every hop's
+transmission is an awaitable priced by its ``LinkProfile``.
+
+Resource-worker <-> ``core/sim`` correspondence (the invariant the
+differential test ``tests/test_async_engine.py`` pins):
+
+  =====================  ==========================================
+  ``simulate_stream``    ``AsyncHopPipeline``
+  =====================  ==========================================
+  ``compute_free[k]``    compute worker ``k``'s position in virtual
+                         time (a serial worker is "free" exactly when
+                         its loop returns to ``HopQueue.get``)
+  ``link_free[k]``       link worker ``k``'s position in virtual time
+  task admission order   FIFO order of the queue chain (each worker
+                         processes and forwards in order)
+  ``tx_ready``           ``_Msg.ready_at`` of the message the compute
+                         worker forwards to its link queue (``prev_done``
+                         for a serial plan, ``prev_start + tx_offset``
+                         for an overlapped one)
+  ``c_ready``            ``_Msg.ready_at`` the link worker stamps for
+                         the downstream compute worker
+                         (``t_done``, or ``t_start + rx_offset``)
+  ``c_done = max(...)``  the downstream worker sleeps its compute time,
+                         then ``sleep_until(data_done)`` — it cannot
+                         finish before all data has arrived
+  trace re-integration   the link worker reprices the planned bit
+                         volume with ``LinkProfile.transfer_time`` at
+                         the transfer's actual virtual start
+  =====================  ==========================================
+
+Timing comes from a pluggable clock: ``VirtualClock`` is a deterministic
+discrete-event driver (timers fire only when every worker is blocked, so
+a run is a bit-reproducible event simulation — this is what makes the
+executor directly comparable to ``simulate_stream``); ``WallClock`` maps
+the same awaits onto real ``asyncio.sleep``.  With unbounded queues the
+virtual-clock timeline reproduces ``simulate_stream`` exactly; bounded
+queues add admission/backpressure (an upstream worker stalls on ``put``
+when its hop queue is full), which the pure simulator does not model.
+
+``AsyncCoachEngine`` rides the online component on top: ``OnlineScheduler``
+decisions (early exit Eq. 10, adaptive precision Eq. 11) are made at
+enqueue time on the end worker, in task order — concurrency never changes
+*decisions*, only timing — and per-hop adaptive bits pick a precision per
+``WirePacket`` hop from per-hop bandwidth EMAs
+(``OnlineScheduler.choose_hop_bits``).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import collections
+import contextlib
+import dataclasses
+import heapq
+import itertools
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+from repro.core import sim
+from repro.core.costs import LinkProfile
+from repro.core.pipeline import (PipelineResult, TaskPlan,
+                                 result_from_stream)
+from repro.serving.base import EngineBase, EngineStats
+
+__all__ = ["VirtualClock", "WallClock", "HopQueue", "AsyncHopPipeline",
+           "run_pipeline_async", "AsyncCoachEngine"]
+
+
+# ==================================================================== clocks
+class VirtualClock:
+    """Deterministic virtual-time driver for a set of asyncio workers.
+
+    Every blocking point of the executor (timed sleeps, queue gets/puts)
+    registers with the clock.  A driver coroutine fires the earliest
+    pending timer only when *all* registered workers are blocked, so the
+    run is a discrete-event simulation: virtual time jumps from event to
+    event and the interleaving is reproducible.
+    """
+
+    def __init__(self):
+        self.now = 0.0
+        self._timers: List[Tuple[float, int, asyncio.Future]] = []
+        self._seq = itertools.count()
+        self._blocked = 0   # workers suspended in a clock primitive
+        self._live = 0      # workers spawned and not yet finished
+        self._idle: Optional[asyncio.Event] = None
+
+    # ---- bookkeeping shared with HopQueue
+    def _maybe_idle(self):
+        if self._idle is not None and self._blocked >= self._live:
+            self._idle.set()
+
+    async def _wait(self, fut: asyncio.Future):
+        """Suspend the calling worker until ``_wake(fut)``."""
+        self._blocked += 1
+        self._maybe_idle()
+        return await fut
+
+    def _wake(self, fut: asyncio.Future, value: Any = None):
+        self._blocked -= 1
+        if not fut.done():
+            fut.set_result(value)
+
+    # ---- public interface
+    async def sleep(self, dt: float):
+        await self.sleep_until(self.now + dt)
+
+    async def sleep_until(self, when: float):
+        if when <= self.now:
+            return
+        fut = asyncio.get_event_loop().create_future()
+        heapq.heappush(self._timers, (when, next(self._seq), fut))
+        await self._wait(fut)
+
+    def spawn(self, coro) -> "asyncio.Task":
+        """Register + start a worker; only spawned workers count toward
+        the quiescence check that gates timer firing."""
+        self._live += 1
+
+        async def wrapped():
+            try:
+                return await coro
+            finally:
+                self._live -= 1
+                self._maybe_idle()
+
+        return asyncio.ensure_future(wrapped())
+
+    async def _drive(self):
+        while True:
+            await self._idle.wait()
+            self._idle.clear()
+            if self._live == 0:
+                return
+            if not self._timers:
+                raise RuntimeError(
+                    "virtual-clock deadlock: all workers blocked with no "
+                    "pending timer")
+            when, _, fut = heapq.heappop(self._timers)
+            self.now = max(self.now, when)
+            self._wake(fut)
+
+    def run(self, main):
+        """Run ``main`` (which spawns workers via ``spawn``) to completion
+        under virtual time; returns its result."""
+        return asyncio.run(self._run(main))
+
+    async def _run(self, main):
+        self._idle = asyncio.Event()
+        driver = asyncio.ensure_future(self._drive())
+        main_t = asyncio.ensure_future(main)
+        try:
+            await asyncio.wait({driver, main_t},
+                               return_when=asyncio.FIRST_COMPLETED)
+            if driver.done() and driver.exception() is not None:
+                main_t.cancel()
+                with contextlib.suppress(asyncio.CancelledError):
+                    await main_t
+                raise driver.exception()
+            return await main_t
+        finally:
+            if not driver.done():
+                driver.cancel()
+                with contextlib.suppress(asyncio.CancelledError):
+                    await driver
+
+
+class WallClock:
+    """Real-time realization of the same clock interface: sleeps map to
+    ``asyncio.sleep`` and ``now`` is the loop clock relative to the start
+    of the run (best effort — scheduling jitter is real here)."""
+
+    def __init__(self):
+        self._t0: Optional[float] = None
+
+    @property
+    def now(self) -> float:
+        loop = asyncio.get_event_loop()
+        if self._t0 is None:
+            self._t0 = loop.time()
+        return loop.time() - self._t0
+
+    async def sleep(self, dt: float):
+        if dt > 0:
+            await asyncio.sleep(dt)
+
+    async def sleep_until(self, when: float):
+        await self.sleep(when - self.now)
+
+    async def _wait(self, fut: asyncio.Future):
+        return await fut
+
+    def _wake(self, fut: asyncio.Future, value: Any = None):
+        if not fut.done():
+            fut.set_result(value)
+
+    def spawn(self, coro) -> "asyncio.Task":
+        return asyncio.ensure_future(coro)
+
+    def run(self, main):
+        return asyncio.run(main)
+
+
+# ==================================================================== queue
+class HopQueue:
+    """Bounded FIFO channel between two pipeline resources.
+
+    Like ``asyncio.Queue`` but clock-aware: a worker blocked in ``get``
+    (empty) or ``put`` (full) is registered with the clock so the virtual
+    driver knows the pipeline is quiescent.  ``maxsize = 0`` means
+    unbounded (the waiting room of ``core/sim``'s serial resources)."""
+
+    def __init__(self, clock, maxsize: int = 0):
+        self._clock = clock
+        self._max = maxsize
+        self._items = collections.deque()
+        self._getters = collections.deque()
+        self._putters = collections.deque()  # (future, item)
+
+    def __len__(self):
+        return len(self._items)
+
+    async def put(self, item):
+        if self._getters:                       # direct handoff
+            self._clock._wake(self._getters.popleft(), item)
+            return
+        if self._max and len(self._items) >= self._max:
+            fut = asyncio.get_event_loop().create_future()
+            self._putters.append((fut, item))
+            await self._clock._wait(fut)        # backpressure: stall upstream
+            return
+        self._items.append(item)
+
+    async def get(self):
+        if self._items:
+            item = self._items.popleft()
+            if self._putters:                   # a slot freed up
+                fut, pitem = self._putters.popleft()
+                self._items.append(pitem)
+                self._clock._wake(fut)
+            return item
+        fut = asyncio.get_event_loop().create_future()
+        self._getters.append(fut)
+        return await self._clock._wait(fut)
+
+
+# ================================================================= executor
+@dataclasses.dataclass
+class _Msg:
+    """One task's in-flight state between two adjacent resources."""
+    idx: int
+    plan: sim.SimPlan
+    ready_at: float     # earliest time the receiving resource may start it
+    data_done: float    # when the upstream transfer fully lands (c_done gate)
+    payload: Any = None
+
+
+_STOP = object()
+
+
+class AsyncHopPipeline:
+    """``2n+1`` resource workers chained by hop queues (see module doc).
+
+    ``segment_fn(k, idx, payload) -> payload`` optionally runs real
+    compute (e.g. ``CollabRuntime.segment_handle(k)``) on each compute
+    worker; the last segment's outputs are collected in ``outputs``.
+    """
+
+    def __init__(self, n_hops: int,
+                 links: Optional[Sequence[Optional[LinkProfile]]] = None,
+                 clock=None, queue_capacity: int = 0,
+                 segment_fn: Optional[Callable[[int, int, Any], Any]] = None):
+        assert n_hops >= 1
+        self.n_hops = n_hops
+        self.n_seg = n_hops + 1
+        self.links = list(links) if links is not None else [None] * n_hops
+        self.clock = clock if clock is not None else VirtualClock()
+        self.capacity = queue_capacity
+        self.segment_fn = segment_fn
+        self.outputs: dict = {}
+
+    def run(self, plan_fn: Callable[[int, float], Any], n_tasks: int,
+            arrivals: Sequence[float],
+            payloads: Optional[Sequence[Any]] = None) -> sim.StreamResult:
+        """Admit ``n_tasks`` tasks at ``arrivals`` and execute the chain.
+
+        ``plan_fn(i, t_arr)`` is called *at enqueue time* (in task order,
+        at the task's virtual arrival) and returns the task's
+        ``sim.SimPlan`` (or a ``TaskPlan``, normalized here) — this is
+        the hook where online decisions happen."""
+        assert n_tasks > 0 and len(arrivals) >= n_tasks
+        clock = self.clock
+        n_hops, n_seg = self.n_hops, self.n_seg
+        comp_busy = [0.0] * n_seg
+        link_busy = [0.0] * n_hops
+        comp_iv: List[List[sim.Interval]] = [[] for _ in range(n_seg)]
+        link_iv: List[List[sim.Interval]] = [[] for _ in range(n_hops)]
+        done = [0.0] * n_tasks
+        exits = [False] * n_tasks
+        self.outputs = {}
+
+        async def admit(q0: HopQueue):
+            for i in range(n_tasks):
+                arr = arrivals[i]
+                await clock.sleep_until(arr)
+                plan = plan_fn(i, arr)
+                if isinstance(plan, TaskPlan):
+                    plan = plan.as_sim_plan(n_hops)
+                assert len(plan.tx) == n_hops, "plan/deployment hop mismatch"
+                payload = payloads[i] if payloads is not None else None
+                await q0.put(_Msg(i, plan, ready_at=arr, data_done=arr,
+                                  payload=payload))
+            await q0.put(_STOP)
+
+        async def compute_worker(k: int, qin: HopQueue,
+                                 qout: Optional[HopQueue]):
+            while True:
+                msg = await qin.get()
+                if msg is _STOP:
+                    if qout is not None:
+                        await qout.put(_STOP)
+                    return
+                await clock.sleep_until(msg.ready_at)
+                start = clock.now                 # = max(ready, worker free)
+                p = msg.plan
+                comp = p.compute[k]
+                if self.segment_fn is not None:
+                    msg.payload = self.segment_fn(k, msg.idx, msg.payload)
+                comp_busy[k] += comp
+                comp_iv[k].append((start, start + comp))
+                data_done = msg.data_done
+                last = k == n_hops or p.early_exit
+                off = None if last else p.tx_offset[k]
+                if last or off is None or off >= comp:   # serial stage
+                    await clock.sleep(comp)
+                    await clock.sleep_until(data_done)   # c_done gate
+                    if last:
+                        done[msg.idx] = clock.now
+                        exits[msg.idx] = p.early_exit
+                        self.outputs[msg.idx] = msg.payload
+                    else:
+                        await qout.put(_Msg(msg.idx, p, ready_at=clock.now,
+                                            data_done=clock.now,
+                                            payload=msg.payload))
+                else:                                    # Fig. 4 overlap
+                    await clock.sleep(off)
+                    await qout.put(_Msg(msg.idx, p, ready_at=clock.now,
+                                        data_done=clock.now,
+                                        payload=msg.payload))
+                    await clock.sleep(comp - off)
+                    await clock.sleep_until(data_done)
+
+        async def link_worker(k: int, qin: HopQueue, qout: HopQueue):
+            link = self.links[k] if k < len(self.links) else None
+            while True:
+                msg = await qin.get()
+                if msg is _STOP:
+                    await qout.put(_STOP)
+                    return
+                await clock.sleep_until(msg.ready_at)    # tx_ready
+                t_start = clock.now
+                dur = msg.plan.tx[k]
+                if link is not None and link.trace is not None and dur > 0:
+                    # re-integrate the planned bit volume at the actual start
+                    bits = dur * link.bandwidth_bps
+                    dur = link.transfer_time(bits, t_start)
+                t_done = t_start + dur
+                roff = msg.plan.rx_offset[k]
+                c_ready = t_done if roff is None \
+                    else max(t_start + roff, msg.ready_at)
+                link_busy[k] += dur
+                link_iv[k].append((t_start, t_done))
+                # hold the packet until the receiver may start, then forward
+                # while (possibly) still transmitting the tail
+                fwd = min(max(c_ready - t_start, 0.0), dur)
+                await clock.sleep(fwd)
+                await qout.put(_Msg(msg.idx, msg.plan, ready_at=c_ready,
+                                    data_done=t_done, payload=msg.payload))
+                await clock.sleep(dur - fwd)
+
+        async def main():
+            # queue j feeds resource j in the alternating chain
+            # compute_0, link_0, compute_1, ..., link_{n-1}, compute_n
+            queues = [HopQueue(clock, self.capacity)
+                      for _ in range(2 * n_hops + 1)]
+            workers = [clock.spawn(admit(queues[0]))]
+            for k in range(n_seg):
+                qout = queues[2 * k + 1] if k < n_hops else None
+                workers.append(clock.spawn(
+                    compute_worker(k, queues[2 * k], qout)))
+            for k in range(n_hops):
+                workers.append(clock.spawn(
+                    link_worker(k, queues[2 * k + 1], queues[2 * k + 2])))
+            await asyncio.gather(*workers)
+
+        self.clock.run(main())
+        arrs = list(arrivals[:n_tasks])
+        return sim.StreamResult(
+            arrivals=arrs, done=done, early_exit=exits,
+            makespan=max(done) - min(arrs),
+            compute_busy=tuple(comp_busy), link_busy=tuple(link_busy),
+            compute_intervals=tuple(tuple(iv) for iv in comp_iv),
+            link_intervals=tuple(tuple(iv) for iv in link_iv))
+
+
+def run_pipeline_async(plans: Sequence[TaskPlan],
+                       arrivals: Optional[Sequence[float]] = None,
+                       arrival_period: float = 0.0,
+                       link: Optional[LinkProfile] = None,
+                       links: Optional[Sequence[Optional[LinkProfile]]] = None,
+                       queue_capacity: int = 0,
+                       clock=None,
+                       segment_fn=None,
+                       payloads: Optional[Sequence[Any]] = None
+                       ) -> PipelineResult:
+    """Async-executor counterpart of ``core.pipeline.run_pipeline``: same
+    plan normalization and result type, but the stream is *executed* by
+    per-resource workers instead of replayed by ``simulate_stream``.
+    With ``queue_capacity = 0`` (unbounded) and a ``VirtualClock`` the
+    two timelines agree to float precision."""
+    n = len(plans)
+    if arrivals is None:
+        arrivals = [i * arrival_period for i in range(n)]
+    if links is None:
+        links = [link]
+    n_hops = max(max(p.n_hops for p in plans), len(links))
+    sps = [p.as_sim_plan(n_hops) for p in plans]
+    pipe = AsyncHopPipeline(n_hops, links=links, clock=clock,
+                            queue_capacity=queue_capacity,
+                            segment_fn=segment_fn)
+    res = pipe.run(lambda i, _arr: sps[i], n, arrivals, payloads=payloads)
+    return result_from_stream(res)
+
+
+# =================================================================== engine
+class AsyncCoachEngine(EngineBase):
+    """COACH engine on the async hop-queue executor.
+
+    Identical decision sequence to the sync ``CoachEngine`` (decisions are
+    made at enqueue time on the end worker, in task order), but the
+    induced plans occupy real per-resource workers: with unbounded queues
+    and the virtual clock the timeline is pinned to
+    ``core.sim.simulate_stream``; ``cfg.queue_capacity`` bounds the hop
+    queues (backpressure), ``cfg.per_hop_bits`` enables per-hop adaptive
+    precision from per-hop bandwidth EMAs."""
+
+    def run_stream(self, tasks, arrival_period: float, classify,
+                   clock=None) -> EngineStats:
+        tasks = list(tasks)
+        n = len(tasks)
+        n_hops = len(self.links)
+        bits_used: List[int] = []
+        correct: List[bool] = []
+        acc = {"exits": 0, "wire": 0.0}
+
+        def admit_plan(i: int, t_arr: float) -> TaskPlan:
+            task = tasks[i]
+            bw = self.link.bps_at(arrival_period * task.id)
+            dec, feats, pred = self.decide(task, bw, classify)
+            hop_bits = None
+            if dec.early_exit:
+                acc["exits"] += 1
+                correct.append(dec.result == task.label)
+            else:
+                if self.cfg.per_hop_bits and self.st.n_hops > 1:
+                    for k in range(1, self.st.n_hops):
+                        self.sched.observe_hop_bandwidth(
+                            k, self.links[k].bps_at(t_arr))
+                    # hop 0 keeps the Eq. 11 choice already in dec.bits
+                    chosen = self.sched.choose_hop_bits(
+                        dec.required_bits or self.cfg.default_bits)
+                    hop_bits = (dec.bits or self.cfg.default_bits,) \
+                        + chosen[1:]
+                bits_used.append(dec.bits or self.cfg.default_bits)
+                correct.append(pred == task.label)
+                self.sched.report_label(feats, task.label)
+            plan, wire_bits = self.plan_for(dec, bw, hop_bits=hop_bits)
+            acc["wire"] += wire_bits
+            return plan
+
+        pipe = AsyncHopPipeline(n_hops, links=self.links, clock=clock,
+                                queue_capacity=self.cfg.queue_capacity)
+        res = pipe.run(admit_plan, n,
+                       [i * arrival_period for i in range(n)])
+        pr = result_from_stream(res)
+        return self._stats(pr, n, acc["exits"], bits_used, acc["wire"],
+                           correct)

@@ -1,0 +1,158 @@
+"""Shared machinery of the COACH serving engines.
+
+``EngineBase`` owns everything that must be *identical* between the
+synchronous reference engine (``repro.serving.engine.CoachEngine``) and
+the async hop-queue engine (``repro.serving.async_engine``): offline
+stage times, semantic cache + threshold calibration, the online
+scheduler, per-task decision making, and TaskPlan construction.  The two
+engines differ only in *how* the resulting plans occupy the ``2n+1``
+resources — one task at a time through ``core.sim.simulate_stream``
+(sync), or concurrently through per-resource asyncio workers (async) —
+so concurrency can never change decisions, only timing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import online as ON
+from repro.core.costs import DeviceProfile, LinkProfile
+from repro.core.pipeline import PipelineResult, TaskPlan
+from repro.core.schedule import StageTimes
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    bits_levels: Sequence[int] = (3, 4, 5, 6, 8)
+    default_bits: int = 8
+    update_centers: bool = True
+    eps: float = 0.005
+    # ---- async hop-queue engine knobs
+    queue_capacity: int = 64   # bounded per-hop queue depth (0 = unbounded)
+    per_hop_bits: bool = True  # per-hop adaptive precision from hop EMAs
+
+
+@dataclasses.dataclass
+class EngineStats:
+    pipeline: PipelineResult
+    exit_ratio: float
+    mean_bits: float
+    wire_kb_per_task: float
+    accuracy: float
+
+
+class EngineBase:
+    """Offline plan + online decision layer shared by both engines."""
+
+    def __init__(self, runtime, stage_times: StageTimes,
+                 end_dev: DeviceProfile, link: LinkProfile,
+                 cloud_dev: DeviceProfile, n_labels: int,
+                 calib_feats: np.ndarray, calib_labels: np.ndarray,
+                 cfg: Optional[EngineConfig] = None,
+                 boundary_elems: Optional[int] = None,
+                 links: Optional[Sequence[LinkProfile]] = None,
+                 hop_bits_offline: Optional[Sequence[int]] = None):
+        """``links`` (one per hop, first = the end device's uplink)
+        activates the multi-hop path; omitting it keeps the classic
+        end->link->cloud deployment with ``link`` as the only hop.
+
+        ``hop_bits_offline`` is the offline partition's per-hop boundary
+        precision (e.g. the mean of ``decision.all_hop_bits[k]``); it is
+        what prices ``stage_times.link[k]`` back to a boundary element
+        count, so per-hop adaptive bits retime the *true* wire volume.
+        Defaults to ``cfg.default_bits`` on every hop.
+
+        ``cfg`` defaults to a fresh ``EngineConfig`` per engine (a shared
+        mutable default instance would leak config edits across engines).
+        """
+        self.rt = runtime
+        self.st = stage_times
+        self.links = list(links) if links is not None else [link]
+        self.link = self.links[0]
+        assert len(self.links) == stage_times.n_hops, \
+            "need one link per stage-time hop"
+        self.cfg = cfg if cfg is not None else EngineConfig()
+        cfg = self.cfg
+        dim = calib_feats.shape[1]
+        self.cache = ON.SemanticCache(n_labels, dim)
+        self.cache.warm_up(calib_feats, calib_labels)
+        self.th = ON.calibrate_thresholds(self.cache, calib_feats,
+                                          calib_labels, eps=cfg.eps,
+                                          bit_levels=cfg.bits_levels)
+        elems = boundary_elems or int(calib_feats.shape[1])
+        offline_bits = list(hop_bits_offline) if hop_bits_offline is not None \
+            else [cfg.default_bits] * self.st.n_hops
+        assert len(offline_bits) == self.st.n_hops, \
+            "need one offline precision per hop"
+        # wire volume of hop k >= 1: the offline plan's occupation of link
+        # k priced back to elements at that hop's offline precision
+        hop_elems = [int(elems)] + [
+            max(1, int(self.st.link[k] * self.links[k].bandwidth_bps
+                       / offline_bits[k]))
+            for k in range(1, self.st.n_hops)]
+        self.sched = ON.OnlineScheduler(
+            self.cache, self.th, elems, stage_times.T_e, stage_times.T_c,
+            update_centers=cfg.update_centers,
+            hop_elems=hop_elems, stage_compute=stage_times.compute)
+
+    # ------------------------------------------------------------ decisions
+    def decide(self, task, bw: float, classify):
+        """One COACH online decision (Eq. 10/11).  ``classify(task) ->
+        (features, predicted_label)``: the caller runs the real model
+        (CollabRuntime) or a proxy.  Identical call sequence in both
+        engines, so a seeded stream yields identical decisions."""
+        feats, pred = classify(task)
+        dec = self.sched.step(feats, bandwidth_bps=bw)
+        return dec, feats, pred
+
+    def plan_for(self, dec: ON.OnlineDecision, bw: float,
+                 hop_bits: Optional[Sequence[int]] = None
+                 ) -> Tuple[TaskPlan, float]:
+        """Build the per-task pipeline plan from an online decision.
+
+        Returns ``(plan, hop0_wire_bits)``.  Without ``hop_bits`` the
+        adaptive precision retimes only the end device's uplink and the
+        inner hops keep their offline-planned occupation (the sync
+        reference semantics); with ``hop_bits`` every hop is retimed from
+        its chosen precision and bandwidth EMA (per-hop adaptive bits)."""
+        st = self.st
+        if dec.early_exit:
+            return TaskPlan(st.T_e, 0.0, 0.0, True), 0.0
+        bits = dec.bits or self.cfg.default_bits
+        wire_bits = self.sched.elems * bits
+        t_tx = wire_bits / bw
+        if st.n_hops == 1:
+            return TaskPlan(
+                st.T_e, t_tx, st.T_c,
+                tx_offset=min(st.first_tx_offset, st.T_e),
+                cloud_offset=st.cloud_start_offset), wire_bits
+        if hop_bits is None:
+            tx: Tuple[float, ...] = (t_tx,) + tuple(st.link[1:])
+        else:
+            assert len(hop_bits) == st.n_hops
+            retimed: List[float] = [t_tx]
+            for k in range(1, st.n_hops):
+                bw_k = self.sched.hop_bandwidth(k) \
+                    or self.links[k].bandwidth_bps
+                retimed.append(self.sched.hop_elems[k] * hop_bits[k] / bw_k)
+            tx = tuple(retimed)
+        return TaskPlan.multihop(
+            compute=st.compute, tx=tx,
+            tx_offsets=tuple(min(st.tx_offsets[k], st.compute[k])
+                             for k in range(st.n_hops)),
+            rx_offsets=st.rx_offsets), wire_bits
+
+    # ------------------------------------------------------------ reporting
+    def _stats(self, pipeline: PipelineResult, n: int, exits: int,
+               bits_used: Sequence[int], wire_bits_total: float,
+               correct: Sequence[bool]) -> EngineStats:
+        return EngineStats(
+            pipeline=pipeline,
+            exit_ratio=exits / n,
+            mean_bits=float(np.mean(bits_used)) if bits_used else 0.0,
+            wire_kb_per_task=wire_bits_total / 8e3 / n,
+            accuracy=float(np.mean(correct)),
+        )

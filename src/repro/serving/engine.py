@@ -15,68 +15,27 @@ Wires together every subsystem:
 The JAX compute is real (CollabRuntime executes both segments); the
 *timing* comes from the calibrated device/link profiles, since this host
 is not a Jetson + A6000 pair (DESIGN.md §2).
+
+``CoachEngine`` here is the *synchronous reference*: tasks are decided
+and accounted one at a time, with all overlap delegated to
+``core.sim.simulate_stream``.  The executor whose real workers overlap
+tasks the way the simulator models lives in
+``repro.serving.async_engine``; both share ``repro.serving.base``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional, Sequence
+from typing import List
 
-import numpy as np
+from repro.core.pipeline import run_pipeline
+from repro.data.pipeline import Task
+from repro.serving.base import EngineBase, EngineConfig, EngineStats
 
-from repro.core import online as ON
-from repro.core.collab import CollabRuntime
-from repro.core.costs import DeviceProfile, LinkProfile
-from repro.core.pipeline import PipelineResult, TaskPlan, run_pipeline
-from repro.core.schedule import StageTimes
-from repro.data.pipeline import CorrelatedTaskStream, Task
+__all__ = ["CoachEngine", "EngineConfig", "EngineStats"]
 
 
-@dataclasses.dataclass
-class EngineConfig:
-    bits_levels: Sequence[int] = (3, 4, 5, 6, 8)
-    default_bits: int = 8
-    update_centers: bool = True
-    eps: float = 0.005
-
-
-@dataclasses.dataclass
-class EngineStats:
-    pipeline: PipelineResult
-    exit_ratio: float
-    mean_bits: float
-    wire_kb_per_task: float
-    accuracy: float
-
-
-class CoachEngine:
-    def __init__(self, runtime: CollabRuntime, stage_times: StageTimes,
-                 end_dev: DeviceProfile, link: LinkProfile,
-                 cloud_dev: DeviceProfile, n_labels: int,
-                 calib_feats: np.ndarray, calib_labels: np.ndarray,
-                 cfg: EngineConfig = EngineConfig(),
-                 boundary_elems: Optional[int] = None,
-                 links: Optional[Sequence[LinkProfile]] = None):
-        """``links`` (one per hop, first = the end device's uplink)
-        activates the multi-hop path; omitting it keeps the classic
-        end->link->cloud deployment with ``link`` as the only hop."""
-        self.rt = runtime
-        self.st = stage_times
-        self.links = list(links) if links is not None else [link]
-        self.link = self.links[0]
-        assert len(self.links) == stage_times.n_hops, \
-            "need one link per stage-time hop"
-        self.cfg = cfg
-        dim = calib_feats.shape[1]
-        self.cache = ON.SemanticCache(n_labels, dim)
-        self.cache.warm_up(calib_feats, calib_labels)
-        self.th = ON.calibrate_thresholds(self.cache, calib_feats,
-                                          calib_labels, eps=cfg.eps,
-                                          bit_levels=cfg.bits_levels)
-        elems = boundary_elems or int(calib_feats.shape[1])
-        self.sched = ON.OnlineScheduler(
-            self.cache, self.th, elems, stage_times.T_e, stage_times.T_c,
-            update_centers=cfg.update_centers)
+class CoachEngine(EngineBase):
+    """Synchronous reference engine (decision + plan per task, in order)."""
 
     def run_stream(self, tasks: List[Task], arrival_period: float,
                    classify) -> EngineStats:
@@ -88,43 +47,18 @@ class CoachEngine:
         wire_bits_total = 0.0
         for task in tasks:
             bw = self.link.bps_at(arrival_period * task.id)
-            feats, pred = classify(task)
-            dec = self.sched.step(feats, bandwidth_bps=bw)
+            dec, feats, pred = self.decide(task, bw, classify)
+            plan, wire_bits = self.plan_for(dec, bw)
+            plans.append(plan)
             if dec.early_exit:
                 exits += 1
-                plans.append(TaskPlan(self.st.T_e, 0.0, 0.0, True))
                 correct.append(dec.result == task.label)
             else:
-                bits = dec.bits or self.cfg.default_bits
-                bits_used.append(bits)
-                wire_bits = self.sched.elems * bits
+                bits_used.append(dec.bits or self.cfg.default_bits)
                 wire_bits_total += wire_bits
-                t_tx = wire_bits / bw
-                st = self.st
-                if st.n_hops == 1:
-                    plans.append(TaskPlan(
-                        st.T_e, t_tx, st.T_c,
-                        tx_offset=min(st.first_tx_offset, st.T_e),
-                        cloud_offset=st.cloud_start_offset))
-                else:
-                    # adaptive precision retimes the end device's uplink;
-                    # the inner hops keep their offline-planned occupation
-                    # (per-hop adaptive bits: ROADMAP open item)
-                    plans.append(TaskPlan.multihop(
-                        compute=st.compute,
-                        tx=(t_tx,) + tuple(st.link[1:]),
-                        tx_offsets=tuple(min(st.tx_offsets[k], st.compute[k])
-                                         for k in range(st.n_hops)),
-                        rx_offsets=st.rx_offsets))
                 correct.append(pred == task.label)
                 self.sched.report_label(feats, task.label)
         pr = run_pipeline(plans, arrival_period=arrival_period,
                           links=self.links)
-        n = len(tasks)
-        return EngineStats(
-            pipeline=pr,
-            exit_ratio=exits / n,
-            mean_bits=float(np.mean(bits_used)) if bits_used else 0.0,
-            wire_kb_per_task=wire_bits_total / 8e3 / n,
-            accuracy=float(np.mean(correct)),
-        )
+        return self._stats(pr, len(tasks), exits, bits_used,
+                           wire_bits_total, correct)

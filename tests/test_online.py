@@ -88,6 +88,62 @@ def test_choose_bits_eq11(q_r, bw, t_e, t_c):
     assert obj(b) <= min(obj(x) for x in levels) + 1e-12
 
 
+@given(st.integers(3, 8), st.floats(1e5, 1e8), st.floats(1e5, 1e8),
+       st.floats(1e-4, 1e-1), st.floats(1e-4, 1e-1))
+@settings(max_examples=60, deadline=None)
+def test_choose_bits_monotone_in_bandwidth(q_r, bw_a, bw_b, t_e, t_c):
+    """Target-chasing is monotone: more bandwidth never picks fewer bits
+    (the Eq. 11 optimum tracks target * bw / elems over a fixed grid)."""
+    bw_lo, bw_hi = sorted((bw_a, bw_b))
+    elems = 100_000
+    assert (ON.choose_bits(q_r, elems, bw_lo, t_e, t_c)
+            <= ON.choose_bits(q_r, elems, bw_hi, t_e, t_c))
+
+
+def _hop_sched(hop_elems, stage_compute):
+    cache = ON.SemanticCache(2, 4)
+    th = ON.Thresholds(s_ext=float("inf"), s_adj=((0.0, 8),))
+    return ON.OnlineScheduler(cache, th, hop_elems[0], stage_compute[0],
+                              stage_compute[-1], hop_elems=hop_elems,
+                              stage_compute=stage_compute)
+
+
+@given(st.integers(3, 8), st.floats(1e5, 1e8), st.floats(1e5, 1e8))
+@settings(max_examples=40, deadline=None)
+def test_choose_hop_bits_degrades_gracefully_without_hop_ema(q_r, bw0, bw1):
+    """A hop whose EMA is missing falls back to the end uplink's EMA (the
+    only measurement the classic engine takes); once observed, the hop
+    chases its own estimate.  Every hop's choice respects Q_c >= Q_r."""
+    sched = _hop_sched((10_000, 5_000), (1e-3, 1.5e-3, 1e-3))
+    sched.observe_bandwidth(bw0)
+    missing = sched.choose_hop_bits(q_r)
+    assert len(missing) == 2 and all(b >= q_r for b in missing)
+    assert missing[1] == ON.choose_bits(q_r, 5_000, bw0, 1.5e-3, 1e-3)
+    sched.observe_hop_bandwidth(1, bw1)
+    with_ema = sched.choose_hop_bits(q_r)
+    assert with_ema[1] == ON.choose_bits(
+        q_r, 5_000, sched.hop_bw_ema[1], 1.5e-3, 1e-3)
+    # hop 0 is untouched by hop-1 observations
+    assert with_ema[0] == missing[0]
+
+
+@given(st.integers(0, 1000), st.integers(2, 6), st.integers(4, 32))
+@settings(max_examples=40, deadline=None)
+def test_cache_centers_stay_unit_scale_under_drift(seed, n_labels, dim):
+    """Eq. 7 with a bounded window is a convex combination, so centers
+    never leave the scale of the (drifting) feature stream."""
+    rng = np.random.default_rng(seed)
+    c = ON.SemanticCache(n_labels, dim, max_count=16)
+    max_norm = 0.0
+    drift = rng.normal(size=dim) * 0.05
+    for t in range(200):
+        f = rng.normal(size=dim) + drift * t   # random walk of the scene
+        max_norm = max(max_norm, float(np.linalg.norm(f)))
+        c.update(f, int(rng.integers(n_labels)))
+    for j in range(n_labels):
+        assert np.linalg.norm(c.centers[j]) <= max_norm + 1e-9
+
+
 def test_exit_ratio_increases_with_correlation():
     ratios = {}
     for corr in ("low", "medium", "high"):
