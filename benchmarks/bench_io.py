@@ -1,0 +1,70 @@
+"""Canonical writer for the ``BENCH_pipeline.json`` perf-trajectory
+artifact.
+
+Exactly one file is ever written: ``<out_dir>/BENCH_pipeline.json``
+(canonical, normally ``experiments/bench/``).  The repo-root
+``BENCH_pipeline.json`` is maintained as a symlink to the canonical file
+(derived, never written independently), so the two can no longer drift.
+
+Rows are tagged with a ``kind`` (``"multihop"``, ``"multitenant"``) and
+merged by kind: a producer replaces its own rows and preserves every
+other producer's, so ``benchmarks/run.py --only multihop`` and
+``--only multitenant`` compose into one artifact.
+``benchmarks/validate_bench.py`` gates the merged schema in CI.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import List
+
+ARTIFACT = "BENCH_pipeline.json"
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def emit_pipeline_rows(out_dir, kind: str, rows: List[dict]) -> Path:
+    """Merge ``rows`` into the canonical artifact under ``out_dir``,
+    replacing existing rows of the same ``kind`` and keeping the rest;
+    refresh the repo-root symlink when the canonical file lives inside
+    the repo.  Returns the canonical path."""
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    # write through a symlink's target (e.g. --out pointed at the repo
+    # root, which is itself a symlink to the canonical file) so existing
+    # other-kind rows are read back rather than clobbered
+    path = (out / ARTIFACT).resolve() if (out / ARTIFACT).is_symlink() \
+        else out / ARTIFACT
+    existing: List[dict] = []
+    if path.is_file():
+        try:
+            existing = [r for r in json.loads(path.read_text())
+                        if isinstance(r, dict)
+                        and r.get("kind", "multihop") != kind]
+        except (ValueError, OSError) as e:
+            # do not fail the producer, but never *silently* drop the
+            # other producers' merged rows
+            print(f"[bench_io] WARNING: could not read existing {path} "
+                  f"({e}); rewriting artifact with only kind={kind!r} rows")
+    for r in rows:
+        r["kind"] = kind
+    payload = existing + list(rows)
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+
+    root = REPO_ROOT / ARTIFACT
+    canonical = path.resolve()
+    if canonical == root.resolve() and not root.is_symlink():
+        return path
+    try:
+        canonical.relative_to(REPO_ROOT)
+    except ValueError:
+        return path  # out_dir outside the repo: leave the root pointer alone
+    try:
+        if root.is_symlink() or root.exists():
+            root.unlink()
+        os.symlink(os.path.relpath(canonical, root.parent), root)
+    except OSError:
+        # filesystem without symlinks: fall back to a derived copy
+        root.write_text(json.dumps(payload, indent=2) + "\n")
+    return path

@@ -19,9 +19,7 @@ checks its schema in CI.
 
 from __future__ import annotations
 
-import json
-from pathlib import Path
-
+from benchmarks.bench_io import emit_pipeline_rows
 from repro.core.costs import (A6000_SERVER, EDGE_AGX_ORIN, ETH_LAN,
                               JETSON_NX, WIFI_5GHZ)
 from repro.core.partitioner import coach_offline_multihop
@@ -106,11 +104,9 @@ def run(out_dir=None, n_tasks: int = N_TASKS):
                     f"{r['throughput_its']:.1f},{r['max_stage_ms']:.2f},"
                     f"{r['bubble_fraction']['cloud']:.3f},{bl}")
     if out_dir is not None:
-        path = Path(out_dir) / "BENCH_pipeline.json"
-        path.write_text(json.dumps(payload, indent=2) + "\n")
-        # perf-trajectory copy at the repo root (stable path across runs)
-        root = Path(__file__).resolve().parent.parent / "BENCH_pipeline.json"
-        root.write_text(json.dumps(payload, indent=2) + "\n")
+        # one canonical artifact (out_dir); the repo-root copy is a
+        # symlink maintained by the shared writer
+        emit_pipeline_rows(out_dir, "multihop", payload)
     return rows
 
 

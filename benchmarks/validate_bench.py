@@ -2,10 +2,23 @@
 
   python benchmarks/validate_bench.py [path/to/BENCH_pipeline.json]
 
-Checks that the perf-trajectory artifact is a non-empty list of rows,
-each carrying the required typed fields, with every (model, hops)
-deployment reported by BOTH the event simulator ("sim") and the async
-hop-queue executor ("async"), and that bubble fractions are sane.
+The artifact is a non-empty list of rows of two kinds (merged by
+``benchmarks.bench_io``):
+
+``kind = "multihop"`` (default when the tag is absent, for artifacts
+predating the tag): the 2-hop vs 3-hop perf trajectory — every
+(model, hops) deployment must be reported by BOTH the event simulator
+(``engine: "sim"``) and the async hop-queue executor (``engine:
+"async"``), with sane bubble fractions.
+
+``kind = "multitenant"``: per-tenant fairness rows — every
+(hops, policy, tenant) must likewise carry BOTH engines (the executor
+and the multi-tenant simulator replay of the same decided plans), with
+policy in {fifo, rr, wdrr}, >= 2 tenants per (hops, policy, engine)
+run, per-tenant SLO accounting in range, and shared-chain bubble
+fractions.
+
+Rows missing an explicit ``engine`` are rejected outright.
 """
 
 from __future__ import annotations
@@ -14,41 +27,86 @@ import json
 import sys
 from pathlib import Path
 
-REQUIRED_NUMERIC = (
+MULTIHOP_NUMERIC = (
     "single_task_ms", "mean_latency_ms", "p99_latency_ms",
     "throughput_its", "makespan_ms", "max_stage_ms", "objective_ms",
 )
+MULTITENANT_NUMERIC = (
+    "mean_latency_ms", "p99_latency_ms", "throughput_its", "makespan_ms",
+    "slo_ms", "norm_p99", "worst_tenant_p99_ms", "worst_tenant_norm_p99",
+    "weight",
+)
 ENGINES = {"sim", "async"}
+POLICIES = {"fifo", "rr", "wdrr"}
+
+
+def _check_common(i: int, row: dict) -> None:
+    assert isinstance(row, dict), f"row {i}: not an object"
+    assert isinstance(row.get("model"), str) and row["model"], f"row {i}"
+    assert isinstance(row.get("hops"), int) and row["hops"] >= 2, \
+        f"row {i}: bad hops"
+    assert "engine" in row, f"row {i}: missing engine"
+    assert row["engine"] in ENGINES, \
+        f"row {i}: engine must be one of {sorted(ENGINES)}"
+    bf = row.get("bubble_fraction")
+    assert isinstance(bf, dict) and {"end", "cloud", "link0"} <= set(bf), \
+        f"row {i}: bubble_fraction missing resources"
+    assert all(isinstance(v, (int, float)) and -1e-9 <= v <= 1 + 1e-9
+               for v in bf.values()), f"row {i}: bubble out of [0, 1]"
+    # an n-tier deployment has n compute + (n-1) link resources
+    assert len(bf) == 2 * row["hops"] - 1, \
+        f"row {i}: expected {2 * row['hops'] - 1} resources"
+
+
+def _check_numeric(i: int, row: dict, fields) -> None:
+    for f in fields:
+        v = row.get(f)
+        assert isinstance(v, (int, float)) and v >= 0, \
+            f"row {i}: bad {f}={v!r}"
+
+
+def _require_both_engines(seen, label: str) -> None:
+    keys = {k[:-1] for k in seen}
+    for key in sorted(keys):
+        missing = ENGINES - {e for (*k, e) in seen if tuple(k) == key}
+        assert not missing, f"{label} {key}: missing engine rows {missing}"
 
 
 def validate(path: Path) -> list:
     data = json.loads(path.read_text())
     assert isinstance(data, list) and data, "payload must be a non-empty list"
-    seen = set()
+    mh_seen, mt_seen = set(), set()
+    mt_runs = {}
     for i, row in enumerate(data):
         assert isinstance(row, dict), f"row {i}: not an object"
-        assert isinstance(row.get("model"), str) and row["model"], f"row {i}"
-        assert isinstance(row.get("hops"), int) and row["hops"] >= 2, \
-            f"row {i}: bad hops"
-        assert row.get("engine") in ENGINES, \
-            f"row {i}: engine must be one of {sorted(ENGINES)}"
-        for f in REQUIRED_NUMERIC:
-            v = row.get(f)
-            assert isinstance(v, (int, float)) and v >= 0, \
-                f"row {i}: bad {f}={v!r}"
-        bf = row.get("bubble_fraction")
-        assert isinstance(bf, dict) and {"end", "cloud", "link0"} <= set(bf), \
-            f"row {i}: bubble_fraction missing resources"
-        assert all(isinstance(v, (int, float)) and -1e-9 <= v <= 1 + 1e-9
-                   for v in bf.values()), f"row {i}: bubble out of [0, 1]"
-        # an n-tier deployment has n compute + (n-1) link resources
-        assert len(bf) == 2 * row["hops"] - 1, \
-            f"row {i}: expected {2 * row['hops'] - 1} resources"
-        seen.add((row["model"], row["hops"], row["engine"]))
-    deployments = {(m, h) for (m, h, _e) in seen}
-    for m, h in sorted(deployments):
-        missing = ENGINES - {e for (mm, hh, e) in seen if (mm, hh) == (m, h)}
-        assert not missing, f"{m}@{h}-hop: missing engine rows {missing}"
+        kind = row.get("kind", "multihop")
+        assert kind in ("multihop", "multitenant"), f"row {i}: kind {kind!r}"
+        _check_common(i, row)
+        if kind == "multihop":
+            _check_numeric(i, row, MULTIHOP_NUMERIC)
+            mh_seen.add((row["model"], row["hops"], row["engine"]))
+            continue
+        _check_numeric(i, row, MULTITENANT_NUMERIC)
+        assert row.get("policy") in POLICIES, \
+            f"row {i}: policy must be one of {sorted(POLICIES)}"
+        assert isinstance(row.get("tenant"), str) and row["tenant"], \
+            f"row {i}: missing tenant"
+        att = row.get("slo_attainment")
+        assert isinstance(att, (int, float)) and -1e-9 <= att <= 1 + 1e-9, \
+            f"row {i}: slo_attainment out of [0, 1]"
+        assert row["weight"] > 0, f"row {i}: non-positive weight"
+        mt_seen.add((row["hops"], row["policy"], row["tenant"],
+                     row["engine"]))
+        mt_runs.setdefault(
+            (row["hops"], row["policy"], row["engine"]), set()).add(
+            row["tenant"])
+    if mh_seen:
+        _require_both_engines(mh_seen, "multihop")
+    if mt_seen:
+        _require_both_engines(mt_seen, "multitenant")
+        for key, tenants in sorted(mt_runs.items()):
+            assert len(tenants) >= 2, \
+                f"multitenant {key}: fewer than 2 tenants ({tenants})"
     return data
 
 
@@ -56,9 +114,12 @@ def main() -> None:
     path = Path(sys.argv[1]) if len(sys.argv) > 1 \
         else Path("experiments/bench/BENCH_pipeline.json")
     rows = validate(path)
-    print(f"{path}: OK ({len(rows)} rows, "
-          f"{len({(r['model'], r['hops']) for r in rows})} deployments x "
-          f"{len({r['engine'] for r in rows})} engines)")
+    kinds = {}
+    for r in rows:
+        kinds[r.get("kind", "multihop")] = \
+            kinds.get(r.get("kind", "multihop"), 0) + 1
+    detail = ", ".join(f"{k}: {n}" for k, n in sorted(kinds.items()))
+    print(f"{path}: OK ({len(rows)} rows; {detail})")
 
 
 if __name__ == "__main__":

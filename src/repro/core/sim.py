@@ -52,6 +52,18 @@ Two entry points:
 
 Both entry points share the same event semantics, so the partitioner
 scores candidates with exactly the timeline the stream executor replays.
+
+``simulate_multitenant_stream`` extends the stream view to *tagged*
+multi-tenant arrivals: several per-tenant task streams are merged into
+one admission sequence by a pluggable admission policy (FIFO /
+round-robin / weighted deficit round-robin, implemented in
+``repro.serving.tenancy``), gated by the shared ingress resource
+(``compute_0``), and the merged stream replays over the same ``2n+1``
+serial resources.  The async multi-tenant executor
+(``repro.serving.tenancy.MultiTenantHopPipeline``) realizes the same
+gate with event-driven ingress credits, so the two admission orders —
+and therefore the two timelines — are differentially pinned by
+``tests/test_tenancy.py``.
 """
 
 from __future__ import annotations
@@ -345,3 +357,111 @@ def simulate_stream(plans: Sequence[SimPlan],
                         link_busy=tuple(link_busy),
                         compute_intervals=tuple(tuple(iv) for iv in compute_iv),
                         link_intervals=tuple(tuple(iv) for iv in link_iv))
+
+
+# ============================================================ multi-tenant
+TenantSlot = Tuple[int, int]  # (tenant index, per-tenant task index)
+
+
+def multitenant_admission_order(
+        plans: Sequence[Sequence[SimPlan]],
+        arrivals: Sequence[Sequence[float]],
+        policy) -> List[TenantSlot]:
+    """Merge per-tenant FIFO streams into one global admission sequence.
+
+    Admission is gated by the shared ingress resource (``compute_0``):
+    each dispatch decision happens at ``t_d = max(free_0, earliest
+    pending arrival)``, the *candidates* are the tenants whose head task
+    has arrived by ``t_d``, and ``policy.pick(candidates, heads)``
+    chooses among them (``heads[t] = (arrival, per-tenant index,
+    SimPlan)``).  Within a tenant, tasks are admitted strictly in
+    arrival (index) order — the policy only interleaves *across*
+    tenants.
+
+    ``policy`` is any object with ``reset(n_tenants)`` and
+    ``pick(candidates, heads) -> tenant`` (the admission schedulers live
+    in ``repro.serving.tenancy``; the policy state machine is shared
+    between this arithmetic gate and the executor's event-driven ingress
+    credits, so the differential harness pins the *gating semantics*,
+    not the policy code).
+    """
+    n_t = len(plans)
+    assert len(arrivals) == n_t
+    for t in range(n_t):
+        assert len(plans[t]) == len(arrivals[t]), f"tenant {t} length mismatch"
+        assert all(a0 <= a1 for a0, a1 in zip(arrivals[t], arrivals[t][1:])), \
+            f"tenant {t} arrivals must be non-decreasing"
+    total = sum(len(p) for p in plans)
+    heads = [0] * n_t
+    free0 = 0.0
+    order: List[TenantSlot] = []
+    policy.reset(n_t)
+    while len(order) < total:
+        pend = [t for t in range(n_t) if heads[t] < len(plans[t])]
+        t_min = min(arrivals[t][heads[t]] for t in pend)
+        t_d = max(free0, t_min)
+        cands = [t for t in pend if arrivals[t][heads[t]] <= t_d]
+        info = {t: (arrivals[t][heads[t]], heads[t], plans[t][heads[t]])
+                for t in cands}
+        t = policy.pick(cands, info)
+        assert t in info, f"policy picked non-candidate tenant {t}"
+        i = heads[t]
+        heads[t] += 1
+        order.append((t, i))
+        free0 = max(arrivals[t][i], free0) + plans[t][i].compute[0]
+    return order
+
+
+@dataclasses.dataclass
+class MultiTenantStreamResult:
+    """A merged multi-tenant timeline plus its tenant tagging.
+
+    ``stream`` is the merged-stream result in admission order;
+    ``order[j]`` names the tenant and per-tenant task index occupying
+    global slot ``j``.  ``n_tenants`` is the declared tenant count (not
+    derived from ``order`` — a tenant that admitted zero tasks still
+    counts).  Per-resource busy intervals follow the same slot order
+    (downstream resources skip early-exited slots), so an executor's
+    recorded multi-tenant schedule can be compared per tenant as well as
+    per resource."""
+    stream: StreamResult
+    order: Tuple[TenantSlot, ...]
+    n_tenants: int = 0
+
+    def tenant_slots(self, tenant: int) -> List[int]:
+        """Global slot indices occupied by ``tenant``, in admission
+        (= per-tenant FIFO) order."""
+        return [j for j, (t, _) in enumerate(self.order) if t == tenant]
+
+    def tenant_view(self, tenant: int
+                    ) -> Tuple[List[float], List[float], List[bool]]:
+        """``(arrivals, done, early_exit)`` of one tenant's tasks, in
+        per-tenant order."""
+        s = self.stream
+        slots = self.tenant_slots(tenant)
+        return ([s.arrivals[j] for j in slots], [s.done[j] for j in slots],
+                [s.early_exit[j] for j in slots])
+
+    def tenant_latencies(self, tenant: int) -> List[float]:
+        arr, done, _ = self.tenant_view(tenant)
+        return [d - a for a, d in zip(arr, done)]
+
+
+def simulate_multitenant_stream(
+        plans: Sequence[Sequence[SimPlan]],
+        arrivals: Sequence[Sequence[float]],
+        policy,
+        links: Optional[Sequence[Optional[LinkProfile]]] = None
+        ) -> MultiTenantStreamResult:
+    """Replay tagged multi-tenant task streams over the shared ``2n+1``
+    resources: compute the policy's admission order (gated by the
+    ingress resource), then replay the merged stream with
+    ``simulate_stream``.  This is the reference timeline the async
+    multi-tenant executor is pinned to."""
+    order = multitenant_admission_order(plans, arrivals, policy)
+    assert order, "empty multi-tenant stream"
+    merged_plans = [plans[t][i] for (t, i) in order]
+    merged_arr = [arrivals[t][i] for (t, i) in order]
+    res = simulate_stream(merged_plans, merged_arr, links=links)
+    return MultiTenantStreamResult(stream=res, order=tuple(order),
+                                   n_tenants=len(plans))

@@ -4,3 +4,9 @@ from repro.serving.async_engine import (AsyncCoachEngine, AsyncHopPipeline,
 from repro.serving.base import EngineConfig, EngineStats
 from repro.serving.engine import CoachEngine
 from repro.serving.generate import generate
+from repro.serving.tenancy import (ADMISSION_POLICIES, FifoAdmission,
+                                   MultiTenantCoachEngine,
+                                   MultiTenantHopPipeline,
+                                   RoundRobinAdmission, TenantSpec,
+                                   WeightedDeficitRoundRobin, make_policy,
+                                   run_multitenant_async)

@@ -50,6 +50,12 @@ enqueue time on the end worker, in task order — concurrency never changes
 *decisions*, only timing — and per-hop adaptive bits pick a precision per
 ``WirePacket`` hop from per-hop bandwidth EMAs
 (``OnlineScheduler.choose_hop_bits``).
+
+Multi-tenant admission lives one layer up in ``repro.serving.tenancy``:
+``AsyncHopPipeline.run`` accepts a pluggable admitter (``admit_fn``)
+which is released by *ingress credits* — a token issued each time the
+end worker is about to block on its input queue — so a policy scheduler
+can gate per-tenant streams on the shared ingress resource.
 """
 
 from __future__ import annotations
@@ -117,6 +123,19 @@ class VirtualClock:
         fut = asyncio.get_event_loop().create_future()
         heapq.heappush(self._timers, (when, next(self._seq), fut))
         await self._wait(fut)
+
+    async def settle(self):
+        """Suspend until every event scheduled for the *current* virtual
+        instant has fired.  A worker woken by a direct queue handoff may
+        run while timers for the same instant are still pending in the
+        heap; a sentinel timer pushed at ``now`` sorts after them (same
+        ``when``, later seq), so awaiting it yields until the instant
+        has fully played out.  Admission dispatchers use this before
+        sampling queue state (``repro.serving.tenancy``)."""
+        while self._timers and self._timers[0][0] <= self.now:
+            fut = asyncio.get_event_loop().create_future()
+            heapq.heappush(self._timers, (self.now, next(self._seq), fut))
+            await self._wait(fut)
 
     def spawn(self, coro) -> "asyncio.Task":
         """Register + start a worker; only spawned workers count toward
@@ -192,6 +211,12 @@ class WallClock:
 
     async def sleep_until(self, when: float):
         await self.sleep(when - self.now)
+
+    async def settle(self):
+        """Best-effort wall-clock counterpart of ``VirtualClock.settle``:
+        yield to the scheduler a few times so same-instant callbacks run."""
+        for _ in range(4):
+            await asyncio.sleep(0)
 
     async def _wait(self, fut: asyncio.Future):
         return await fut
@@ -286,15 +311,31 @@ class AsyncHopPipeline:
         self.outputs: dict = {}
 
     def run(self, plan_fn: Callable[[int, float], Any], n_tasks: int,
-            arrivals: Sequence[float],
-            payloads: Optional[Sequence[Any]] = None) -> sim.StreamResult:
+            arrivals: Optional[Sequence[float]],
+            payloads: Optional[Sequence[Any]] = None,
+            admit_fn: Optional[Callable] = None) -> sim.StreamResult:
         """Admit ``n_tasks`` tasks at ``arrivals`` and execute the chain.
 
         ``plan_fn(i, t_arr)`` is called *at enqueue time* (in task order,
         at the task's virtual arrival) and returns the task's
         ``sim.SimPlan`` (or a ``TaskPlan``, normalized here) — this is
-        the hook where online decisions happen."""
-        assert n_tasks > 0 and len(arrivals) >= n_tasks
+        the hook where online decisions happen.
+
+        ``admit_fn(q0, credits, record)`` replaces the built-in
+        single-stream admission worker (multi-tenant admission lives in
+        ``repro.serving.tenancy``).  It must put exactly ``n_tasks``
+        ``_Msg``s with distinct ``idx`` in ``[0, n_tasks)`` into ``q0``
+        followed by ``_STOP``, and call ``record(idx, arrival)`` for
+        each.  ``credits`` is a clock-aware queue receiving one token
+        every time the ingress compute worker (resource 0) is about to
+        block on its input queue — i.e. exactly when it becomes free —
+        so a policy admitter can gate dispatch on the shared ingress
+        resource (and, through bounded hop queues, on downstream
+        backpressure).  With ``admit_fn`` set, ``plan_fn``/``arrivals``/
+        ``payloads`` are ignored."""
+        assert n_tasks > 0
+        assert admit_fn is not None or (arrivals is not None
+                                        and len(arrivals) >= n_tasks)
         clock = self.clock
         n_hops, n_seg = self.n_hops, self.n_seg
         comp_busy = [0.0] * n_seg
@@ -303,7 +344,13 @@ class AsyncHopPipeline:
         link_iv: List[List[sim.Interval]] = [[] for _ in range(n_hops)]
         done = [0.0] * n_tasks
         exits = [False] * n_tasks
+        arrs = [0.0] * n_tasks if admit_fn is not None \
+            else list(arrivals[:n_tasks])
         self.outputs = {}
+        credits = HopQueue(clock) if admit_fn is not None else None
+
+        def record(idx: int, arrival: float):
+            arrs[idx] = arrival
 
         async def admit(q0: HopQueue):
             for i in range(n_tasks):
@@ -321,6 +368,8 @@ class AsyncHopPipeline:
         async def compute_worker(k: int, qin: HopQueue,
                                  qout: Optional[HopQueue]):
             while True:
+                if k == 0 and credits is not None:
+                    await credits.put(None)
                 msg = await qin.get()
                 if msg is _STOP:
                     if qout is not None:
@@ -389,7 +438,9 @@ class AsyncHopPipeline:
             # compute_0, link_0, compute_1, ..., link_{n-1}, compute_n
             queues = [HopQueue(clock, self.capacity)
                       for _ in range(2 * n_hops + 1)]
-            workers = [clock.spawn(admit(queues[0]))]
+            workers = [clock.spawn(admit_fn(queues[0], credits, record)
+                                   if admit_fn is not None
+                                   else admit(queues[0]))]
             for k in range(n_seg):
                 qout = queues[2 * k + 1] if k < n_hops else None
                 workers.append(clock.spawn(
@@ -400,7 +451,6 @@ class AsyncHopPipeline:
             await asyncio.gather(*workers)
 
         self.clock.run(main())
-        arrs = list(arrivals[:n_tasks])
         return sim.StreamResult(
             arrivals=arrs, done=done, early_exit=exits,
             makespan=max(done) - min(arrs),
@@ -455,39 +505,16 @@ class AsyncCoachEngine(EngineBase):
         tasks = list(tasks)
         n = len(tasks)
         n_hops = len(self.links)
-        bits_used: List[int] = []
-        correct: List[bool] = []
-        acc = {"exits": 0, "wire": 0.0}
+        acc = {"exits": 0, "wire": 0.0, "bits": [], "correct": []}
 
-        def admit_plan(i: int, t_arr: float) -> TaskPlan:
+        def admit(i: int, t_arr: float) -> TaskPlan:
             task = tasks[i]
             bw = self.link.bps_at(arrival_period * task.id)
-            dec, feats, pred = self.decide(task, bw, classify)
-            hop_bits = None
-            if dec.early_exit:
-                acc["exits"] += 1
-                correct.append(dec.result == task.label)
-            else:
-                if self.cfg.per_hop_bits and self.st.n_hops > 1:
-                    for k in range(1, self.st.n_hops):
-                        self.sched.observe_hop_bandwidth(
-                            k, self.links[k].bps_at(t_arr))
-                    # hop 0 keeps the Eq. 11 choice already in dec.bits
-                    chosen = self.sched.choose_hop_bits(
-                        dec.required_bits or self.cfg.default_bits)
-                    hop_bits = (dec.bits or self.cfg.default_bits,) \
-                        + chosen[1:]
-                bits_used.append(dec.bits or self.cfg.default_bits)
-                correct.append(pred == task.label)
-                self.sched.report_label(feats, task.label)
-            plan, wire_bits = self.plan_for(dec, bw, hop_bits=hop_bits)
-            acc["wire"] += wire_bits
-            return plan
+            return self.admit_plan(task, bw, t_arr, classify, acc)
 
         pipe = AsyncHopPipeline(n_hops, links=self.links, clock=clock,
                                 queue_capacity=self.cfg.queue_capacity)
-        res = pipe.run(admit_plan, n,
-                       [i * arrival_period for i in range(n)])
+        res = pipe.run(admit, n, [i * arrival_period for i in range(n)])
         pr = result_from_stream(res)
-        return self._stats(pr, n, acc["exits"], bits_used, acc["wire"],
-                           correct)
+        return self._stats(pr, n, acc["exits"], acc["bits"], acc["wire"],
+                           acc["correct"])

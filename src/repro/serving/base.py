@@ -145,6 +145,38 @@ class EngineBase:
                              for k in range(st.n_hops)),
             rx_offsets=st.rx_offsets), wire_bits
 
+    def admit_plan(self, task, bw: float, t_bw: float, classify,
+                   acc: dict) -> TaskPlan:
+        """One enqueue-time decision + plan, with shared accounting.
+
+        ``bw`` prices the uplink for Eq. 11; ``t_bw`` is the wall/virtual
+        time at which the per-hop bandwidths are observed (per-hop
+        adaptive bits, when enabled).  ``acc`` accumulates the decision
+        aggregates every engine reports: ``exits`` (int), ``wire``
+        (float, bits), ``bits`` (list), ``correct`` (list).  Used by the
+        async single-stream engine and per-tenant by the multi-tenant
+        engine, so decision accounting can never diverge between them."""
+        dec, feats, pred = self.decide(task, bw, classify)
+        hop_bits = None
+        if dec.early_exit:
+            acc["exits"] += 1
+            acc["correct"].append(dec.result == task.label)
+        else:
+            if self.cfg.per_hop_bits and self.st.n_hops > 1:
+                for k in range(1, self.st.n_hops):
+                    self.sched.observe_hop_bandwidth(
+                        k, self.links[k].bps_at(t_bw))
+                # hop 0 keeps the Eq. 11 choice already in dec.bits
+                chosen = self.sched.choose_hop_bits(
+                    dec.required_bits or self.cfg.default_bits)
+                hop_bits = (dec.bits or self.cfg.default_bits,) + chosen[1:]
+            acc["bits"].append(dec.bits or self.cfg.default_bits)
+            acc["correct"].append(pred == task.label)
+            self.sched.report_label(feats, task.label)
+        plan, wire_bits = self.plan_for(dec, bw, hop_bits=hop_bits)
+        acc["wire"] += wire_bits
+        return plan
+
     # ------------------------------------------------------------ reporting
     def _stats(self, pipeline: PipelineResult, n: int, exits: int,
                bits_used: Sequence[int], wire_bits_total: float,

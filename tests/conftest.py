@@ -21,4 +21,5 @@ if importlib.util.find_spec("hypothesis") is None:
         "test_pipeline.py",
         "test_quant.py",
         "test_ssm.py",
+        "test_tenancy_props.py",
     ]

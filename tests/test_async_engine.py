@@ -187,6 +187,34 @@ def test_bounded_queues_complete_in_order_with_backpressure():
         assert b.done >= a.done - TOL
 
 
+@pytest.mark.slow
+def test_wall_clock_driver_smoke():
+    """WallClock is the only driver without a differential pin (real
+    scheduling jitter makes exact times unreproducible); this real-time
+    smoke run asserts the *completion set* — every task id, its early-
+    exit flag, and full-pipeline completion order — matches a
+    VirtualClock run of the same stream (~100 ms of wall time)."""
+    from repro.serving.async_engine import WallClock
+
+    plans = _random_multihop_plans(9, n_hops=2, n=16)
+    arrivals = [i * 1.5e-3 for i in range(len(plans))]
+    ref = run_pipeline_async(plans, arrivals=arrivals)
+    wall = run_pipeline_async(plans, arrivals=arrivals, clock=WallClock())
+    assert [t.id for t in wall.tasks] == [t.id for t in ref.tasks]
+    assert [t.early_exit for t in wall.tasks] == \
+        [t.early_exit for t in ref.tasks]
+    # per-resource interval counts match (every task visited every
+    # resource it was planned to)
+    for ivw, ivr in zip(wall.compute_intervals, ref.compute_intervals):
+        assert len(ivw) == len(ivr)
+    for ivw, ivr in zip(wall.link_intervals, ref.link_intervals):
+        assert len(ivw) == len(ivr)
+    # full-pipeline tasks complete in admission order on the wall clock
+    full = [t.done for t in wall.tasks if not t.early_exit]
+    assert full == sorted(full)
+    assert wall.makespan > 0
+
+
 def test_virtual_clock_deadlock_detected():
     clock = VirtualClock()
 
