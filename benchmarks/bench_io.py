@@ -6,10 +6,11 @@ Exactly one file is ever written: ``<out_dir>/BENCH_pipeline.json``
 ``BENCH_pipeline.json`` is maintained as a symlink to the canonical file
 (derived, never written independently), so the two can no longer drift.
 
-Rows are tagged with a ``kind`` (``"multihop"``, ``"multitenant"``) and
-merged by kind: a producer replaces its own rows and preserves every
-other producer's, so ``benchmarks/run.py --only multihop`` and
-``--only multitenant`` compose into one artifact.
+Rows are tagged with a ``kind`` (``"multihop"``, ``"multitenant"``,
+``"planner"``) and merged by kind: a producer replaces its own rows and
+preserves every other producer's, so ``benchmarks/run.py --only
+multihop``, ``--only multitenant`` and ``--only planner`` compose into
+one artifact.
 ``benchmarks/validate_bench.py`` gates the merged schema in CI.
 """
 

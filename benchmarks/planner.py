@@ -1,0 +1,90 @@
+"""Offline-planner candidate throughput: batched fast scorer vs naive
+per-candidate simulation.
+
+For VGG16/ResNet101 on the 2-tier (end->cloud) and 3-tier
+(end->edge->cloud) deployments, run the *same* full-stride multi-cut
+search twice:
+
+  naive   ``coach_offline_multihop(fast=False)`` — every candidate pays
+          a full event simulation times the relax ladder (the
+          pre-refactor path, kept as the ground-truth baseline)
+  fast    ``coach_offline_multihop(fast=True)`` — the batched
+          prefix-sum scorer of ``repro.core.plan_fast`` plus top-K
+          event-sim rescoring
+
+and report wall time, candidates/sec and the throughput speedup, with
+an ``argmin_match`` flag asserting the two searches returned the same
+``PartitionDecision`` (cuts + per-hop bits) and objective (1e-9) — the
+fast path is a pure speedup, not an approximation.  Rows are merged
+into ``BENCH_pipeline.json`` as ``kind: "planner"`` via
+``benchmarks.bench_io`` and validated by ``benchmarks/validate_bench.py``
+in CI.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.bench_io import emit_pipeline_rows
+from benchmarks.multihop import DEPLOYMENTS
+from repro.core.partitioner import coach_offline_multihop
+from repro.models.cnn import resnet101, vgg16
+
+OBJ_RTOL = 1e-9
+
+
+def _search(graph, devices, links, fast: bool):
+    t0 = time.perf_counter()
+    off = coach_offline_multihop(graph, devices, links, chain_stride=1,
+                                 fast=fast)
+    return off, time.perf_counter() - t0
+
+
+def run_case(graph, n_tiers: int) -> dict:
+    devices, links = DEPLOYMENTS[n_tiers]
+    naive, naive_s = _search(graph, devices, links, fast=False)
+    fast, fast_s = _search(graph, devices, links, fast=True)
+    argmin_match = (
+        naive.decision.cuts == fast.decision.cuts
+        and naive.decision.all_hop_bits == fast.decision.all_hop_bits
+        and abs(naive.objective - fast.objective)
+        <= OBJ_RTOL * max(1.0, naive.objective))
+    cps_naive = naive.candidates / max(naive_s, 1e-12)
+    cps_fast = fast.candidates / max(fast_s, 1e-12)
+    return {
+        "model": graph.name,
+        "hops": n_tiers,
+        "chain_stride": 1,
+        "candidates_naive": naive.candidates,
+        "candidates_fast": fast.candidates,
+        "naive_s": naive_s,
+        "fast_s": fast_s,
+        "cand_per_s_naive": cps_naive,
+        "cand_per_s_fast": cps_fast,
+        "speedup": cps_fast / max(cps_naive, 1e-12),
+        "argmin_match": bool(argmin_match),
+        "objective_ms": fast.objective * 1e3,
+        "segments": [len(s) for s in fast.decision.segments(graph)],
+    }
+
+
+def run(out_dir=None):
+    rows = ["planner,model,hops,candidates,naive_s,fast_s,"
+            "cand_per_s_naive,cand_per_s_fast,speedup,argmin_match"]
+    payload = []
+    for graph in (vgg16(), resnet101()):
+        for n_tiers in (2, 3):
+            r = run_case(graph, n_tiers)
+            payload.append(r)
+            rows.append(
+                f"planner,{r['model']},{r['hops']},{r['candidates_fast']},"
+                f"{r['naive_s']:.3f},{r['fast_s']:.3f},"
+                f"{r['cand_per_s_naive']:.0f},{r['cand_per_s_fast']:.0f},"
+                f"{r['speedup']:.1f},{r['argmin_match']}")
+    if out_dir is not None:
+        emit_pipeline_rows(out_dir, "planner", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run(out_dir="experiments/bench")))

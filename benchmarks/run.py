@@ -15,8 +15,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 from benchmarks import (ablation, arch_partition, fig1_locality,
                         fig2_schemes, fig5_dynamic, fig6_fig7_bandwidth,
-                        kernels_bench, multihop, multitenant, roofline,
-                        table1_latency, table2_context)
+                        kernels_bench, multihop, multitenant, planner,
+                        roofline, table1_latency, table2_context)
 
 MODULES = {
     "fig1": fig1_locality,
@@ -28,10 +28,11 @@ MODULES = {
     "ablation": ablation,
     "arch_partition": arch_partition,
     "kernels": kernels_bench,
-    # multihop + multitenant merge their rows into one canonical
-    # BENCH_pipeline.json via benchmarks.bench_io
+    # multihop + multitenant + planner merge their rows into one
+    # canonical BENCH_pipeline.json via benchmarks.bench_io
     "multihop": multihop,        # 2-hop vs 3-hop paired sim/async rows
     "multitenant": multitenant,  # per-tenant fairness-vs-bubble rows
+    "planner": planner,          # offline-search candidate throughput
     "roofline": roofline,
 }
 

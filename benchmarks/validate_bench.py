@@ -18,7 +18,15 @@ policy in {fifo, rr, wdrr}, >= 2 tenants per (hops, policy, engine)
 run, per-tenant SLO accounting in range, and shared-chain bubble
 fractions.
 
-Rows missing an explicit ``engine`` are rejected outright.
+``kind = "planner"``: offline-search throughput rows — naive-vs-fast
+wall time and candidates/sec for the same full-stride sweep, with
+``argmin_match`` required to be ``true`` (the fast scorer must return
+the exact decision of the naive per-candidate simulation search) and a
+positive throughput ``speedup``.
+
+Rows of the engine-bearing kinds missing an explicit ``engine`` are
+rejected outright (planner rows describe the search, not an executor,
+and carry no engine).
 """
 
 from __future__ import annotations
@@ -35,6 +43,10 @@ MULTITENANT_NUMERIC = (
     "mean_latency_ms", "p99_latency_ms", "throughput_its", "makespan_ms",
     "slo_ms", "norm_p99", "worst_tenant_p99_ms", "worst_tenant_norm_p99",
     "weight",
+)
+PLANNER_NUMERIC = (
+    "candidates_naive", "candidates_fast", "naive_s", "fast_s",
+    "cand_per_s_naive", "cand_per_s_fast", "speedup", "objective_ms",
 )
 ENGINES = {"sim", "async"}
 POLICIES = {"fifo", "rr", "wdrr"}
@@ -72,6 +84,19 @@ def _require_both_engines(seen, label: str) -> None:
         assert not missing, f"{label} {key}: missing engine rows {missing}"
 
 
+def _check_planner(i: int, row: dict) -> None:
+    assert isinstance(row.get("model"), str) and row["model"], f"row {i}"
+    assert isinstance(row.get("hops"), int) and row["hops"] >= 2, \
+        f"row {i}: bad hops"
+    _check_numeric(i, row, PLANNER_NUMERIC)
+    assert row["speedup"] > 0, f"row {i}: non-positive planner speedup"
+    assert isinstance(row.get("chain_stride"), int) \
+        and row["chain_stride"] >= 1, f"row {i}: bad chain_stride"
+    # the fast scorer is a pure speedup: a mismatching argmin is a bug
+    assert row.get("argmin_match") is True, \
+        f"row {i}: planner argmin_match must be true"
+
+
 def validate(path: Path) -> list:
     data = json.loads(path.read_text())
     assert isinstance(data, list) and data, "payload must be a non-empty list"
@@ -80,7 +105,11 @@ def validate(path: Path) -> list:
     for i, row in enumerate(data):
         assert isinstance(row, dict), f"row {i}: not an object"
         kind = row.get("kind", "multihop")
-        assert kind in ("multihop", "multitenant"), f"row {i}: kind {kind!r}"
+        assert kind in ("multihop", "multitenant", "planner"), \
+            f"row {i}: kind {kind!r}"
+        if kind == "planner":
+            _check_planner(i, row)
+            continue
         _check_common(i, row)
         if kind == "multihop":
             _check_numeric(i, row, MULTIHOP_NUMERIC)

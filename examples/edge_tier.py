@@ -15,6 +15,7 @@ model/stream prints alongside for comparison.
 
 import argparse
 import sys
+import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
@@ -50,7 +51,9 @@ def group_cuts_from_frontiers(decision, cfg):
 
 def run_tier(cfg, params, graph, devices, links, stream, feats, labels,
              requests: int, seed: int):
+    t0 = time.perf_counter()
     off = coach_offline_multihop(graph, devices, links)
+    plan_s = time.perf_counter() - t0
     cuts = group_cuts_from_frontiers(off.decision, cfg)
     hop_bits = [int(np.mean(list(b.values()))) if b else 8
                 for b in off.decision.all_hop_bits]
@@ -75,7 +78,7 @@ def run_tier(cfg, params, graph, devices, links, stream, feats, labels,
     # the semantic cache sees an identical decision sequence)
     astats = mk_engine(AsyncCoachEngine).run_stream(
         list(tasks), arrival_period=off.times.max_stage, classify=classify)
-    return off, cuts, stats, astats
+    return off, cuts, stats, astats, plan_s
 
 
 def main():
@@ -102,9 +105,9 @@ def main():
                              (WIFI_5GHZ(args.bandwidth), ETH_LAN())),
     }
     for name, (devices, links) in tiers.items():
-        off, cuts, stats, astats = run_tier(cfg, params, graph, devices,
-                                            links, stream, feats, labels,
-                                            args.requests, args.seed)
+        off, cuts, stats, astats, plan_s = run_tier(
+            cfg, params, graph, devices, links, stream, feats, labels,
+            args.requests, args.seed)
         pr = stats.pipeline
         bubbles = " ".join(
             f"c{k}={pr.bubble_fraction(('compute', k)):.2f}"
@@ -114,6 +117,9 @@ def main():
             for k in range(len(links)))
         print(f"[{name}] arch={cfg.name} cuts={cuts}/{cfg.num_groups} "
               f"objective={off.objective * 1e3:.2f}ms")
+        print(f"  planner: {off.candidates} candidates in "
+              f"{plan_s * 1e3:.1f}ms "
+              f"({off.candidates / max(plan_s, 1e-9):.0f} cand/s)")
         print(f"  exit_ratio={stats.exit_ratio:.2%} "
               f"mean_bits={stats.mean_bits:.1f} "
               f"wire_kb/task={stats.wire_kb_per_task:.1f}")

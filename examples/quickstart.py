@@ -11,6 +11,7 @@
 """
 
 import sys
+import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
@@ -37,12 +38,17 @@ def main():
 
     # 2. offline component ---------------------------------------------------
     link = WIFI_5GHZ(50)
+    t0 = time.perf_counter()
     off = coach_offline(graph, JETSON_NX, A6000_SERVER, link)
+    plan_s = time.perf_counter() - t0
     t = off.times
     print(f"offline: |V_e|={len(off.decision.end_set)} of {len(graph)} "
           f"bits={sorted(set(off.decision.bits.values()))} "
           f"T_e={t.T_e*1e3:.2f}ms T_t={t.T_t*1e3:.2f}ms T_c={t.T_c*1e3:.2f}ms "
           f"B_c={t.B_c*1e3:.2f} B_t={t.B_t*1e3:.2f} obj={off.objective*1e3:.2f}")
+    print(f"planner: {off.candidates} candidates in {plan_s*1e3:.1f}ms "
+          f"({off.candidates/max(plan_s, 1e-9):.0f} cand/s, batched fast "
+          f"scorer + event-sim rescoring)")
 
     # 3./4. collaborative execution ------------------------------------------
     rt = CollabRuntime(cfg, params, cut_group=1, default_bits=8)

@@ -14,11 +14,18 @@ Recursive divide-and-conquer over the model DAG:
      (this is what turns the O(c^n) joint branch search into O(c·n));
   4. keep the argmin of Eq. 6 subject to Eq. 1/3/4.
 
-Every candidate is scored with the executable event semantics in
-``repro.core.schedule`` / ``repro.core.sim`` (no closed-form
+Every *returned* strategy is scored with the executable event semantics
+in ``repro.core.schedule`` / ``repro.core.sim`` (no closed-form
 approximations), so the chosen strategy is exactly what the pipeline
-executor will see.  The classic end->cloud search (``coach_offline``) is
-the ``n_hops = 1`` case of ``coach_offline_multihop``.
+executor will see.  By default the sweep itself runs through the batched
+incremental scorer of ``repro.core.plan_fast`` — an exact O(boundary
+events) reformulation of the same event semantics, differentially pinned
+to the simulator — and only the shortlisted top-K candidates are
+rescored with the full simulation, so the argmin is identical to the
+naive per-candidate search at a fraction of the cost (``fast=False``
+recovers the naive path).  The classic end->cloud search
+(``coach_offline``) is the ``n_hops = 1`` case of
+``coach_offline_multihop``.
 """
 
 from __future__ import annotations
@@ -28,6 +35,7 @@ import itertools
 import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core import plan_fast
 from repro.core.costs import DeviceProfile, LinkProfile, LayerNode, ModelGraph
 from repro.core.schedule import (Edge, PartitionDecision, StageTimes,
                                  evaluate_multihop, evaluate_partition)
@@ -95,6 +103,7 @@ def chain_flow(graph: ModelGraph,
     elems: List[ChainElem] = []
     i = 0
     idset = set(ids)
+    pos = {nid: j for j, nid in enumerate(ids)}  # id -> chain position
     while i < len(ids):
         u = ids[i]
         kids = [c for c in graph.children(u) if c in idset]
@@ -108,13 +117,14 @@ def chain_flow(graph: ModelGraph,
         common = set.intersection(*reach)
         join = min(common)
         block_ids = tuple(x for x in ids if u < x < join)
+        blockset = set(block_ids)
         # branches: connected chains inside the block starting at each child
         branches = []
         for k in kids:
             if k == join:
                 continue  # skip-edge branch (no layers)
             br, cur = [], k
-            while cur != join and cur in set(block_ids):
+            while cur != join and cur in blockset:
                 br.append(cur)
                 nxt = [c for c in graph.children(cur) if c in idset]
                 cur = nxt[0] if nxt else join
@@ -123,7 +133,7 @@ def chain_flow(graph: ModelGraph,
         if block_ids:
             elems.append(ChainElem(block_nodes=block_ids,
                                    branches=tuple(branches)))
-        i = ids.index(join)
+        i = pos[join]
     return elems
 
 
@@ -160,8 +170,55 @@ class OfflineResult:
     feasible: bool
 
 
+class QuantCache:
+    """Memoized Eq. 1 quantization search.
+
+    The dichotomous precision of a boundary tensor depends only on its
+    *producer* node, and the same frontier recurs across every multi-cut
+    tuple containing it — so both layers are cached: per-node minimal
+    bits (one oracle search per producer, ever) and per-frontier
+    boundary-bit maps (one dict per distinct frontier).  One instance is
+    scoped to one (eps, oracle, hi_bits) search."""
+
+    def __init__(self, graph: ModelGraph, eps: float, oracle: AccOracle,
+                 hi_bits: int = 16):
+        self.graph = graph
+        self.eps = eps
+        self.oracle = oracle
+        self.hi_bits = hi_bits
+        self._node: Dict[int, int] = {}
+        self._frontier: Dict[frozenset, Dict[Edge, int]] = {}
+
+    def node_bits(self, u: int) -> int:
+        b = self._node.get(u)
+        if b is None:
+            b = dichotomous_bits(self.graph.node(u), self.eps, self.oracle,
+                                 hi=self.hi_bits)
+            self._node[u] = b
+        return b
+
+    def boundary_bits(self, end_set: frozenset) -> Dict[Edge, int]:
+        """Eq. 1 minimal precisions of a frontier's boundary tensors.
+        Returns the cached dict — callers must copy before mutating."""
+        got = self._frontier.get(end_set)
+        if got is None:
+            got = {(u, v): self.node_bits(u)
+                   for (u, v) in self.graph.boundary_edges(end_set)
+                   if u >= 0}  # raw input: fixed input precision
+            self._frontier[end_set] = got
+        return got
+
+
 def _quantize_boundary(graph: ModelGraph, end_set: frozenset, eps: float,
-                       oracle: AccOracle, hi_bits: int = 16) -> Dict[Edge, int]:
+                       oracle: AccOracle, hi_bits: int = 16,
+                       cache: Optional[QuantCache] = None) -> Dict[Edge, int]:
+    if cache is not None:
+        # a cache answers for exactly one search configuration — reject a
+        # mismatched one instead of silently returning wrong precisions
+        assert (cache.graph is graph and cache.eps == eps
+                and cache.oracle is oracle and cache.hi_bits == hi_bits), \
+            "QuantCache built for a different (graph, eps, oracle, hi_bits)"
+        return cache.boundary_bits(end_set)
     bits: Dict[Edge, int] = {}
     for (u, v) in graph.boundary_edges(end_set):
         if u < 0:
@@ -225,7 +282,9 @@ def coach_offline_multihop(graph: ModelGraph,
                            oracle: AccOracle = analytic_acc_loss,
                            ratio_grid: int = 8,
                            min_end_nodes: int = 1,
-                           chain_stride: int = 1) -> OfflineResult:
+                           chain_stride: int = 1,
+                           fast: bool = True,
+                           shortlist_k: int = 16) -> OfflineResult:
     """Algorithm 1 offline component over an ``len(links)``-hop chain of
     devices (end, edge tiers..., cloud).
 
@@ -234,14 +293,36 @@ def coach_offline_multihop(graph: ModelGraph,
     component's task features F are GAP'd from it — so the degenerate
     all-cloud partition is excluded by default.  ``chain_stride``
     subsamples the chain-cut grid for large graphs × many hops (the block
-    recursion still refines around the best coarse cuts).
+    recursion still refines around the best coarse cuts; the default
+    ``fast`` batched scorer makes full-stride sweeps cheap, so ``1`` is
+    the normal setting).
+
+    ``fast`` routes candidate scoring through ``repro.core.plan_fast``:
+    all chain-cut tuples are scored at once from numpy prefix-sum tables
+    (exact O(boundary-events) reformulation of the event semantics) and
+    only the top-``shortlist_k`` candidates per phase are rescored with
+    the full event simulator — the returned decision and objective are
+    identical to ``fast=False``, which keeps the naive per-candidate
+    simulation sweep (links with bandwidth traces fall back to it too).
     """
     n_hops = len(links)
     assert len(devices) == n_hops + 1, "need one device per segment"
     elems = chain_flow(graph)
     prefixes = chain_prefixes(graph, elems)
+    qcache = QuantCache(graph, eps, oracle)
     n_cands = 0
     best: Optional[Tuple] = None
+    use_fast = (fast and len(graph) > 0
+                and all(lk.trace is None for lk in links))
+    tables: Optional[plan_fast.PlannerTables] = None
+
+    def get_tables() -> plan_fast.PlannerTables:
+        nonlocal tables
+        if tables is None:
+            tables = plan_fast.build_tables(
+                graph, devices, links, qcache.node_bits,
+                pref_counts=[len(p) for p in prefixes])
+        return tables
 
     def consider(frontier_ids: Sequence[Tuple[int, ...]]):
         nonlocal best, n_cands
@@ -253,7 +334,7 @@ def coach_offline_multihop(graph: ModelGraph,
             if not prev <= f or not graph.valid_end_set(f):
                 return
             prev = f
-        bits_min = [_quantize_boundary(graph, f, eps, oracle)
+        bits_min = [_quantize_boundary(graph, f, eps, oracle, cache=qcache)
                     for f in frontiers]
         (dec, st, obj, feas), c = _relax_bits(
             graph, frontiers, bits_min, devices, links, T_max)
@@ -265,8 +346,20 @@ def coach_offline_multihop(graph: ModelGraph,
     # ---- chain-level multi-cuts: non-decreasing tuples of chain positions
     # (cut after element i; position 0 => nothing upstream of that hop)
     positions = strided_positions(len(prefixes), chain_stride)
-    for combo in itertools.combinations_with_replacement(positions, n_hops):
-        consider([prefixes[i] for i in combo])
+    n_combos = math.comb(len(positions) + n_hops - 1, n_hops)
+    if use_fast and n_combos > shortlist_k:
+        # batched scoring of the whole sweep; exact event-sim rescoring of
+        # the shortlist, in sweep order (first-seen tie-break preserved)
+        short, n_fast = plan_fast.chain_shortlist(
+            get_tables(), positions, n_hops, min_end_nodes, T_max,
+            shortlist_k)
+        n_cands += n_fast
+        for combo in short:
+            consider([prefixes[i] for i in combo])
+    else:
+        for combo in itertools.combinations_with_replacement(
+                positions, n_hops):
+            consider([prefixes[i] for i in combo])
 
     assert best is not None, "no valid partition candidate"
     chain_best_cuts: Tuple[frozenset, ...] = best[0].cuts
@@ -274,6 +367,7 @@ def coach_offline_multihop(graph: ModelGraph,
     # ---- recurse into virtual blocks: refine each hop's cut inside the
     # blocks at a shared flop-ratio grid, holding the other hops at their
     # best chain-level frontiers (Alg.1 l.13-14)
+    refined_cands: List[List[frozenset]] = []
     for k in range(n_hops):
         prefix: List[int] = []
         for e in elems:
@@ -283,10 +377,19 @@ def coach_offline_multihop(graph: ModelGraph,
                     r = g / ratio_grid
                     cut_ids = list(base) + _branch_ratio_cut(
                         graph, e.branches, r)
-                    refined = [set(c) for c in chain_best_cuts]
+                    refined = [frozenset(c) for c in chain_best_cuts]
                     refined[k] = frozenset(cut_ids)
-                    consider(refined)
+                    refined_cands.append(refined)
             prefix.extend(e.ids())
+    if use_fast and len(refined_cands) > shortlist_k:
+        picks, n_fast = plan_fast.frontier_shortlist(
+            get_tables(), refined_cands, min_end_nodes, T_max, shortlist_k)
+        n_cands += n_fast
+        for i in picks:
+            consider(refined_cands[i])
+    else:
+        for refined in refined_cands:
+            consider(refined)
 
     dec, st, obj, feas = best
     return OfflineResult(decision=dec, times=st, objective=obj,
@@ -298,36 +401,63 @@ def coach_offline(graph: ModelGraph, end_dev: DeviceProfile,
                   eps: float = 0.005, T_max: float = math.inf,
                   oracle: AccOracle = analytic_acc_loss,
                   ratio_grid: int = 8,
-                  min_end_nodes: int = 1) -> OfflineResult:
+                  min_end_nodes: int = 1,
+                  fast: bool = True) -> OfflineResult:
     """Classic end->cloud offline search: ``n_hops = 1`` of the multi-hop
     divide-and-conquer."""
     return coach_offline_multihop(
         graph, (end_dev, cloud_dev), (link,), eps=eps, T_max=T_max,
-        oracle=oracle, ratio_grid=ratio_grid, min_end_nodes=min_end_nodes)
+        oracle=oracle, ratio_grid=ratio_grid, min_end_nodes=min_end_nodes,
+        fast=fast)
 
 
 # ------------------------------------------------------- brute-force oracle
 def brute_force(graph: ModelGraph, end_dev, cloud_dev, link,
                 eps: float = 0.005, T_max: float = math.inf,
                 oracle: AccOracle = analytic_acc_loss,
-                min_end_nodes: int = 1) -> OfflineResult:
-    """Exponential reference for tests: all downward-closed end sets."""
+                min_end_nodes: int = 1,
+                fast: bool = True,
+                shortlist_k: int = 16) -> OfflineResult:
+    """Exponential reference for tests: all downward-closed end sets.
+
+    ``fast`` ranks the (exponentially many) end sets with the batched
+    scorer and rescores the shortlist with the event simulator — the
+    same pure-speedup funnel as ``coach_offline_multihop``."""
     n = len(graph)
     assert n <= 18, "brute force limited to small graphs"
+    qcache = QuantCache(graph, eps, oracle)
     best = None
     cands = 0
+    end_sets = []
     for mask in range(1 << n):
         end_ids = frozenset(i for i in range(n) if mask >> i & 1)
         if len(end_ids) < min_end_nodes:
             continue
         if not graph.valid_end_set(end_ids):
             continue
-        bits = _quantize_boundary(graph, end_ids, eps, oracle)
+        end_sets.append(end_ids)
+
+    def score(end_ids: frozenset):
+        nonlocal best, cands
+        bits = _quantize_boundary(graph, end_ids, eps, oracle, cache=qcache)
         (dec, st, obj, feas), c = _relax_bits(
             graph, [end_ids], [bits], (end_dev, cloud_dev), (link,), T_max)
         cands += c
         key = (not feas, obj)
         if best is None or key < (not best[3], best[2]):
             best = (dec, st, obj, feas)
+
+    if fast and link.trace is None and len(end_sets) > shortlist_k:
+        tables = plan_fast.build_tables(
+            graph, (end_dev, cloud_dev), (link,), qcache.node_bits)
+        picks, n_fast = plan_fast.frontier_shortlist(
+            tables, [[s] for s in end_sets], min_end_nodes, T_max,
+            shortlist_k)
+        cands += n_fast
+        for i in picks:
+            score(end_sets[i])
+    else:
+        for end_ids in end_sets:
+            score(end_ids)
     dec, st, obj, feas = best
     return OfflineResult(dec, st, obj, cands, feas)
