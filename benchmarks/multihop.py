@@ -11,19 +11,29 @@ resource chain:
                     resource asyncio workers on the virtual clock, with
                     bounded hop queues — the served engine's defaults)
 
-and report latency / throughput / per-resource bubble fractions side by
-side.  Also emits ``BENCH_pipeline.json`` (the perf-trajectory artifact)
-when an output directory is given; ``benchmarks/validate_bench.py``
-checks its schema in CI.
+Every (model, deployment, engine) is measured twice, as a paired
+``hop_exit`` on/off experiment: "off" streams every task through the
+full chain; "on" runs the hop-level semantic-exit cascade (per-tier
+probes calibrated on depth-attenuated boundary features of a correlated
+task stream — the real Eq. 8-10 machinery, seeded) and terminates exited
+tasks at their exit tier, releasing all downstream resources.  The pair
+isolates the new measurable axis: bubble-fraction / p99 with and without
+hop-level exits.  Also emits ``BENCH_pipeline.json`` (the perf-
+trajectory artifact) when an output directory is given;
+``benchmarks/validate_bench.py`` checks its schema — including the
+on/off pairing — in CI.
 """
 
 from __future__ import annotations
 
 from benchmarks.bench_io import emit_pipeline_rows
+from repro.core import online as ON
 from repro.core.costs import (A6000_SERVER, EDGE_AGX_ORIN, ETH_LAN,
                               JETSON_NX, WIFI_5GHZ)
 from repro.core.partitioner import coach_offline_multihop
 from repro.core.pipeline import plan_from_stage_times, run_pipeline
+from repro.data.pipeline import (CorrelatedTaskStream,
+                                 make_hop_calibration_sets)
 from repro.models.cnn import resnet101, vgg16
 from repro.serving.async_engine import run_pipeline_async
 from repro.serving.base import EngineConfig
@@ -31,6 +41,7 @@ from repro.serving.base import EngineConfig
 MBPS_UPLINK = 50.0
 N_TASKS = 400
 ARRIVAL_SLACK = 1.05
+SEED = 0
 # bound the hop queues exactly the way the served engine does by default
 ASYNC_QUEUE_CAPACITY = EngineConfig().queue_capacity
 
@@ -47,7 +58,7 @@ def _resource_names(n_links: int):
     return comp, [f"link{k}" for k in range(n_links)]
 
 
-def _row(graph, n_tiers, engine, pr, st, objective) -> dict:
+def _row(graph, n_tiers, engine, pr, st, objective, hop_exit) -> dict:
     comp_names, link_names = _resource_names(n_tiers - 1)
     bubbles = {name: pr.bubble_fraction(("compute", k))
                for k, name in enumerate(comp_names)}
@@ -57,6 +68,9 @@ def _row(graph, n_tiers, engine, pr, st, objective) -> dict:
         "model": graph.name,
         "hops": n_tiers,
         "engine": engine,
+        "hop_exit": hop_exit,
+        "exit_ratio": pr.exit_ratio,
+        "exit_hops": {str(k): v for k, v in pr.exit_hop_counts().items()},
         "single_task_ms": st.latency * 1e3,
         "mean_latency_ms": pr.mean_latency * 1e3,
         "p99_latency_ms": pr.p99_latency * 1e3,
@@ -68,19 +82,48 @@ def _row(graph, n_tiers, engine, pr, st, objective) -> dict:
     }
 
 
+def decide_exit_hops(n_hops: int, n_tasks: int, seed: int = SEED) -> list:
+    """Per-task exit hops from the real hop-level semantic cascade: a
+    seeded correlated task stream with depth-attenuated boundary
+    features, one calibrated probe per tier (Eq. 8-10), first exit wins.
+    Returns one ``exit_hop`` (or ``None``) per task."""
+    # depth_decay 0.9: mild per-tier concentration, so the cascade keeps
+    # a non-degenerate three-way mix (end exits / edge exits / cloud)
+    stream = CorrelatedTaskStream(n_labels=20, dim=64, correlation="medium",
+                                  seed=seed, n_probe_depths=max(n_hops, 1),
+                                  depth_decay=0.9)
+    sets = make_hop_calibration_sets(stream, 400, n_depths=max(n_hops, 1))
+    probes = ON.build_hop_probes(sets, stream.n_labels)
+    sched = ON.OnlineScheduler(probes[0].cache, probes[0].thresholds,
+                               boundary_elems=1, T_e=1.0, T_c=1.0,
+                               hop_probes=probes[1:])
+    out = []
+    for task in stream.tasks(n_tasks):
+        feats = task.hop_features if task.hop_features is not None \
+            else task.features[None]
+        out.append(sched.step_cascade(feats, bandwidth_bps=1e6).exit_hop)
+    return out
+
+
 def run_deployment(graph, n_tiers: int, n_tasks: int = N_TASKS,
                    chain_stride: int = 1) -> list:
     devices, links = DEPLOYMENTS[n_tiers]
     off = coach_offline_multihop(graph, devices, links,
                                  chain_stride=chain_stride)
     st = off.times
-    plans = [plan_from_stage_times(st) for _ in range(n_tasks)]
     period = st.max_stage * ARRIVAL_SLACK
-    pr = run_pipeline(plans, arrival_period=period, links=list(links))
-    pa = run_pipeline_async(plans, arrival_period=period, links=list(links),
-                            queue_capacity=ASYNC_QUEUE_CAPACITY)
-    rows = [_row(graph, n_tiers, "sim", pr, st, off.objective),
-            _row(graph, n_tiers, "async", pa, st, off.objective)]
+    exit_hops = decide_exit_hops(n_tiers - 1, n_tasks)
+    rows = []
+    for hop_exit in (False, True):
+        plans = [plan_from_stage_times(st, exit_hop=eh if hop_exit else None)
+                 for eh in exit_hops]
+        pr = run_pipeline(plans, arrival_period=period, links=list(links))
+        pa = run_pipeline_async(plans, arrival_period=period,
+                                links=list(links),
+                                queue_capacity=ASYNC_QUEUE_CAPACITY)
+        rows += [_row(graph, n_tiers, "sim", pr, st, off.objective, hop_exit),
+                 _row(graph, n_tiers, "async", pa, st, off.objective,
+                      hop_exit)]
     seg = [len(s) for s in off.decision.segments(graph)]
     for r in rows:
         r["segments"] = seg
@@ -88,8 +131,8 @@ def run_deployment(graph, n_tiers: int, n_tasks: int = N_TASKS,
 
 
 def run(out_dir=None, n_tasks: int = N_TASKS):
-    rows = ["multihop,engine,model,hops,latency_ms,p99_ms,throughput_its,"
-            "max_stage_ms,bubble_cloud,bubble_links"]
+    rows = ["multihop,engine,model,hops,hop_exit,exit_ratio,latency_ms,"
+            "p99_ms,throughput_its,max_stage_ms,bubble_cloud,bubble_links"]
     payload = []
     # full-stride sweeps everywhere: the batched planner (core.plan_fast)
     # made chain_stride subsampling unnecessary even for ResNet101 3-hop
@@ -102,6 +145,7 @@ def run(out_dir=None, n_tasks: int = N_TASKS):
                               for k in range(n_tiers - 1))
                 rows.append(
                     f"multihop,{r['engine']},{r['model']},{r['hops']},"
+                    f"{int(r['hop_exit'])},{r['exit_ratio']:.3f},"
                     f"{r['mean_latency_ms']:.2f},{r['p99_latency_ms']:.2f},"
                     f"{r['throughput_its']:.1f},{r['max_stage_ms']:.2f},"
                     f"{r['bubble_fraction']['cloud']:.3f},{bl}")

@@ -9,7 +9,14 @@ The artifact is a non-empty list of rows of two kinds (merged by
 predating the tag): the 2-hop vs 3-hop perf trajectory — every
 (model, hops) deployment must be reported by BOTH the event simulator
 (``engine: "sim"``) and the async hop-queue executor (``engine:
-"async"``), with sane bubble fractions.
+"async"``), with sane bubble fractions, and as a paired ``hop_exit``
+on/off experiment: every (model, hops, engine) needs one row with the
+hop-level semantic-exit cascade enabled and one with it disabled, with
+``exit_ratio`` in range (> 0 on the hop-exit rows, 0 on the off rows)
+and an ``exit_hops`` histogram consistent with it.  The hop-exit checks
+(field presence + pairing) only apply to rows carrying an explicit
+``kind`` tag — untagged legacy rows predate ``hop_exit`` too and keep
+the original schema.
 
 ``kind = "multitenant"``: per-tenant fairness rows — every
 (hops, policy, tenant) must likewise carry BOTH engines (the executor
@@ -97,10 +104,29 @@ def _check_planner(i: int, row: dict) -> None:
         f"row {i}: planner argmin_match must be true"
 
 
+def _check_multihop_exit(i: int, row: dict) -> None:
+    assert isinstance(row.get("hop_exit"), bool), \
+        f"row {i}: multihop rows need a boolean hop_exit tag"
+    ratio = row.get("exit_ratio")
+    assert isinstance(ratio, (int, float)) and -1e-9 <= ratio <= 1 + 1e-9, \
+        f"row {i}: exit_ratio out of [0, 1]"
+    hist = row.get("exit_hops")
+    assert isinstance(hist, dict) and all(
+        isinstance(v, int) and v >= 0 for v in hist.values()), \
+        f"row {i}: bad exit_hops histogram"
+    if row["hop_exit"]:
+        assert ratio > 0 and sum(hist.values()) > 0, \
+            f"row {i}: hop_exit row without exits"
+    else:
+        assert ratio == 0 and not hist, \
+            f"row {i}: hop_exit-off row reports exits"
+
+
 def validate(path: Path) -> list:
     data = json.loads(path.read_text())
     assert isinstance(data, list) and data, "payload must be a non-empty list"
     mh_seen, mt_seen = set(), set()
+    mh_exit = {}
     mt_runs = {}
     for i, row in enumerate(data):
         assert isinstance(row, dict), f"row {i}: not an object"
@@ -113,6 +139,12 @@ def validate(path: Path) -> list:
         _check_common(i, row)
         if kind == "multihop":
             _check_numeric(i, row, MULTIHOP_NUMERIC)
+            # untagged rows predate the hop_exit pairing (see docstring)
+            if "kind" in row:
+                _check_multihop_exit(i, row)
+                mh_exit.setdefault(
+                    (row["model"], row["hops"], row["engine"]), set()).add(
+                    row["hop_exit"])
             mh_seen.add((row["model"], row["hops"], row["engine"]))
             continue
         _check_numeric(i, row, MULTITENANT_NUMERIC)
@@ -131,6 +163,10 @@ def validate(path: Path) -> list:
             row["tenant"])
     if mh_seen:
         _require_both_engines(mh_seen, "multihop")
+        for key, variants in sorted(mh_exit.items()):
+            assert variants == {False, True}, \
+                f"multihop {key}: needs paired hop_exit on/off rows " \
+                f"(got {sorted(variants)})"
     if mt_seen:
         _require_both_engines(mt_seen, "multitenant")
         for key, tenants in sorted(mt_runs.items()):

@@ -5,9 +5,14 @@ component picks an ordered multi-cut (Jetson end, AGX-Orin edge, A6000
 cloud; WiFi uplink + metro-ethernet backhaul), the real JAX model runs as
 three ``CollabRuntime`` segments with one quantized ``WirePacket`` per
 hop, the online component decides early exit / adaptive precision per
-task, and the ``2n+1``-resource pipeline accounts latency, throughput,
-and per-resource bubbles.  A classic 2-tier (end -> cloud) run of the same
-model/stream prints alongside for comparison.
+task — including *hop-level* semantic exits: the edge tier runs its own
+calibrated probe on its boundary activation and terminates confident
+tasks there, releasing the backhaul and the cloud — and the
+``2n+1``-resource pipeline accounts latency, throughput, and
+per-resource bubbles.  A classic 2-tier (end -> cloud) run of the same
+model/stream prints alongside for comparison; the ``exit_hops``
+histogram line shows where tasks left the chain (segment 0 = end
+device, 1 = edge tier).
 
   PYTHONPATH=src python examples/edge_tier.py \
       [--arch gemma2-2b] [--requests 64] [--bandwidth 50]
@@ -29,7 +34,8 @@ from repro.core.collab import CollabRuntime
 from repro.core.costs import (A6000_SERVER, EDGE_AGX_ORIN, ETH_LAN,
                               JETSON_NX, WIFI_5GHZ, transformer_graph)
 from repro.core.partitioner import coach_offline_multihop
-from repro.data.pipeline import CorrelatedTaskStream, make_calibration_set
+from repro.data.pipeline import (CorrelatedTaskStream,
+                                 make_hop_calibration_sets)
 from repro.models import model as M
 from repro.serving.async_engine import AsyncCoachEngine
 from repro.serving.engine import CoachEngine
@@ -49,7 +55,7 @@ def group_cuts_from_frontiers(decision, cfg):
     return tuple(cuts)
 
 
-def run_tier(cfg, params, graph, devices, links, stream, feats, labels,
+def run_tier(cfg, params, graph, devices, links, stream, calib_sets,
              requests: int, seed: int):
     t0 = time.perf_counter()
     off = coach_offline_multihop(graph, devices, links)
@@ -58,18 +64,22 @@ def run_tier(cfg, params, graph, devices, links, stream, feats, labels,
     hop_bits = [int(np.mean(list(b.values()))) if b else 8
                 for b in off.decision.all_hop_bits]
     rt = CollabRuntime(cfg, params, cuts, default_bits=hop_bits)
+    feats, labels = calib_sets[0]
+    # one calibration set per intermediate tier activates that tier's
+    # semantic probe (hop-level early exit); the 2-tier run gets none
     mk_engine = lambda cls: cls(
         rt, off.times, devices[0], links[0], devices[-1],
         n_labels=16, calib_feats=feats, calib_labels=labels,
         boundary_elems=128 * cfg.d_model, links=list(links),
-        hop_bits_offline=hop_bits)
+        hop_bits_offline=hop_bits, hop_calib=calib_sets[1:len(links)])
 
     def classify(task):
         toks = (np.abs((task.features[:8] * 1000).astype(np.int64))
                 % cfg.vocab_size).astype(np.int32)
         inp = jnp.asarray(toks)[None]
         logits, _packets = rt.run(inp)
-        return task.features, int(np.argmax(logits[0]) % stream.n_labels)
+        return (task.hop_features, int(np.argmax(logits[0])
+                                       % stream.n_labels))
 
     tasks = stream.tasks(requests)
     stats = mk_engine(CoachEngine).run_stream(
@@ -94,9 +104,12 @@ def main():
     key = jax.random.PRNGKey(args.seed)
     params = M.init_params(cfg, key)
     graph = transformer_graph(cfg, batch=1, seq=128)
+    # two probe depths: the end device's boundary and the edge tier's
+    # (decay 0.9, matching benchmarks/multihop.py's cascade)
     stream = CorrelatedTaskStream(n_labels=16, dim=cfg.d_model,
-                                  correlation="medium", seed=args.seed)
-    feats, labels = make_calibration_set(stream, n=300)
+                                  correlation="medium", seed=args.seed,
+                                  n_probe_depths=2, depth_decay=0.9)
+    calib_sets = make_hop_calibration_sets(stream, n=300)
 
     tiers = {
         "end->cloud": ((JETSON_NX, A6000_SERVER),
@@ -106,7 +119,7 @@ def main():
     }
     for name, (devices, links) in tiers.items():
         off, cuts, stats, astats, plan_s = run_tier(
-            cfg, params, graph, devices, links, stream, feats, labels,
+            cfg, params, graph, devices, links, stream, calib_sets,
             args.requests, args.seed)
         pr = stats.pipeline
         bubbles = " ".join(
@@ -121,6 +134,7 @@ def main():
               f"{plan_s * 1e3:.1f}ms "
               f"({off.candidates / max(plan_s, 1e-9):.0f} cand/s)")
         print(f"  exit_ratio={stats.exit_ratio:.2%} "
+              f"exit_hops={stats.exit_hops or {}} "
               f"mean_bits={stats.mean_bits:.1f} "
               f"wire_kb/task={stats.wire_kb_per_task:.1f}")
         print(f"  latency mean={pr.mean_latency * 1e3:.2f}ms "

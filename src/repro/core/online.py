@@ -13,7 +13,7 @@ All math follows the paper:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -48,11 +48,26 @@ def separability(sims: np.ndarray) -> float:
 
 @dataclasses.dataclass
 class OnlineDecision:
+    """One task's online outcome.
+
+    ``early_exit`` keeps its classic meaning — the probe on the *end
+    device* exited the task, nothing is ever transmitted.  ``exit_hop``
+    generalizes it to hop-level semantic exits: ``exit_hop = k >= 1``
+    means the task was transmitted (``bits`` chosen by Eq. 11 for the
+    uplink), probes at boundaries ``1..k-1`` declined, and the probe at
+    boundary ``k`` (an intermediate tier) exited it with ``result`` —
+    the task occupies compute ``0..k`` / links ``0..k-1`` only.
+    ``early_exit`` is True iff ``exit_hop == 0``."""
     early_exit: bool
     result: Optional[int]       # label if early-exited (Eq. 10)
     separability: float
     bits: Optional[int]         # chosen Q_c if transmitted
     required_bits: Optional[int]  # Q_r from separability thresholds
+    exit_hop: Optional[int] = None
+
+    def __post_init__(self):
+        if self.early_exit and self.exit_hop is None:
+            self.exit_hop = 0
 
 
 class SemanticCache:
@@ -128,6 +143,34 @@ def calibrate_thresholds(cache: SemanticCache, feats: np.ndarray,
     return Thresholds(s_ext=s_ext, s_adj=s_adj)
 
 
+@dataclasses.dataclass
+class HopProbe:
+    """Semantic probe state of one intermediate tier: its own label
+    centers and calibrated thresholds, keyed by that boundary's
+    activations (deeper boundaries are more discriminative, so their
+    calibrated exit thresholds admit more of the stream)."""
+    cache: SemanticCache
+    thresholds: Thresholds
+
+
+def build_hop_probes(calib_sets: Sequence[Tuple[np.ndarray, np.ndarray]],
+                     n_labels: int, eps: float = 0.005,
+                     bit_levels: Sequence[int] = (3, 4, 5, 6, 8),
+                     max_count: Optional[int] = 16) -> List[HopProbe]:
+    """Calibrate one ``HopProbe`` per boundary from per-boundary
+    calibration sets ``[(feats, labels), ...]`` (§III-C run once per
+    tier: warm the centers, then pick the eps-bounded exit threshold on
+    that boundary's own separability distribution)."""
+    probes = []
+    for feats, labels in calib_sets:
+        cache = SemanticCache(n_labels, feats.shape[1], max_count=max_count)
+        cache.warm_up(feats, labels)
+        th = calibrate_thresholds(cache, feats, labels, eps=eps,
+                                  bit_levels=bit_levels)
+        probes.append(HopProbe(cache=cache, thresholds=th))
+    return probes
+
+
 def choose_bits(required: int, elems: int, bandwidth_bps: float,
                 T_e: float, T_c: float,
                 levels: Sequence[int] = (3, 4, 5, 6, 8, 12, 16)) -> int:
@@ -165,13 +208,17 @@ class OnlineScheduler:
                  boundary_elems: int, T_e: float, T_c: float,
                  update_centers: bool = True,
                  hop_elems: Optional[Sequence[int]] = None,
-                 stage_compute: Optional[Sequence[float]] = None):
+                 stage_compute: Optional[Sequence[float]] = None,
+                 hop_probes: Optional[Sequence[HopProbe]] = None):
         self.cache = cache
         self.th = thresholds
         self.elems = boundary_elems
         self.T_e, self.T_c = T_e, T_c
         self.update_centers = update_centers
         self.bw_ema: Optional[float] = None
+        # semantic probes of the intermediate tiers (segment k >= 1 maps
+        # to hop_probes[k - 1]); empty = probe only on the end device
+        self.hop_probes: Tuple[HopProbe, ...] = tuple(hop_probes or ())
         self.hop_elems: Tuple[int, ...] = tuple(int(e) for e in hop_elems) \
             if hop_elems else (int(boundary_elems),)
         sc = tuple(stage_compute) if stage_compute else (T_e, T_c)
@@ -237,7 +284,73 @@ class OnlineScheduler:
         q_c = choose_bits(q_r, self.elems, bw, self.T_e, self.T_c)
         return OnlineDecision(False, None, s, q_c, q_r)
 
+    # -------------------------------------------------- hop-level probes
+    def probe_hop(self, segment: int, feat: np.ndarray) -> OnlineDecision:
+        """Run the semantic probe of intermediate tier ``segment`` (>= 1)
+        on its boundary activation: Eq. 8-10 against that tier's own
+        centers and calibrated exit threshold.  On exit, the tier's
+        centers refresh with the probe's own result (Eq. 7), exactly like
+        the end device's classic exit path."""
+        assert 1 <= segment <= len(self.hop_probes), \
+            f"no probe calibrated for segment {segment}"
+        probe = self.hop_probes[segment - 1]
+        sims = probe.cache.similarities(feat)
+        s = separability(sims)
+        if s > probe.thresholds.s_ext:
+            j = int(np.argmax(sims))  # Eq. 10 at tier ``segment``
+            if self.update_centers:
+                probe.cache.update(feat, j)
+            return OnlineDecision(False, j, s, None, None,
+                                  exit_hop=segment)
+        return OnlineDecision(False, None, s, None,
+                              probe.thresholds.required_bits(s))
+
+    def step_cascade(self, hop_feats: Sequence[np.ndarray],
+                     bandwidth_bps: Optional[float] = None
+                     ) -> OnlineDecision:
+        """Full hop-level decision cascade (SPINN-style progressive
+        inference on the COACH probe): the classic end-device step first
+        (exit / Eq. 11 uplink precision), then the intermediate tiers'
+        probes in chain order — the first tier whose probe clears its own
+        threshold terminates the task there (``exit_hop``).  The merged
+        decision keeps the uplink ``bits``: a task exiting at tier k >= 1
+        was still transmitted over hops ``0..k-1``.
+
+        ``hop_feats[k]`` is the boundary activation feeding the probe at
+        segment ``k``; a shorter list reuses its last entry."""
+        feat0 = hop_feats[0]
+        dec = self.step(feat0, bandwidth_bps=bandwidth_bps)
+        if dec.early_exit or not self.hop_probes:
+            return dec
+        for seg in range(1, len(self.hop_probes) + 1):
+            feat = hop_feats[min(seg, len(hop_feats) - 1)]
+            hd = self.probe_hop(seg, feat)
+            if hd.exit_hop is not None:
+                return dataclasses.replace(
+                    dec, result=hd.result, exit_hop=hd.exit_hop,
+                    separability=hd.separability)
+        return dec
+
     def report_label(self, feat: np.ndarray, label: int):
         """Cloud returned the true result: refresh the semantic center."""
         if self.update_centers:
             self.cache.update(feat, label)
+
+    def report_label_hops(self, hop_feats: Sequence[np.ndarray], label: int,
+                          upto: Optional[int] = None):
+        """A result label flowed back down the chain: refresh the end
+        device's centers *and* every intermediate tier's that the task
+        passed (each saw its boundary activation and declined to exit).
+        ``upto = k`` limits the refresh to segments ``< k`` (the tiers a
+        task exiting at segment ``k`` actually crossed — the exiting
+        tier itself already self-updated in ``probe_hop``); ``None``
+        refreshes the whole cascade (full-pipeline task, true label)."""
+        if not self.update_centers:
+            return
+        last = len(self.hop_probes) if upto is None \
+            else min(upto - 1, len(self.hop_probes))
+        if upto is None or upto > 0:
+            self.cache.update(np.asarray(hop_feats[0]), label)
+        for seg in range(1, last + 1):
+            feat = hop_feats[min(seg, len(hop_feats) - 1)]
+            self.hop_probes[seg - 1].cache.update(np.asarray(feat), label)

@@ -36,7 +36,11 @@ class TaskPlan:
     optional overlap offsets); ``multihop`` builds the general form whose
     per-segment/per-hop durations live in ``compute``/``tx``.  Offsets
     express intra-task overlap measured by the single-task event
-    simulation (Fig. 4); ``None`` means strictly serial stages."""
+    simulation (Fig. 4); ``None`` means strictly serial stages.
+
+    ``exit_hop = e`` marks a hop-level semantic early exit at segment
+    ``e`` (the task runs compute ``0..e`` and links ``0..e-1`` only);
+    ``early_exit`` is the legacy boolean spelling of ``exit_hop = 0``."""
     t_end: float
     t_tx: float
     t_cloud: float
@@ -48,19 +52,22 @@ class TaskPlan:
     tx: Tuple[float, ...] = ()
     tx_offsets: Tuple[Optional[float], ...] = ()
     rx_offsets: Tuple[Optional[float], ...] = ()
+    exit_hop: Optional[int] = None
 
     @classmethod
     def multihop(cls, compute: Sequence[float], tx: Sequence[float],
                  tx_offsets: Optional[Sequence[Optional[float]]] = None,
                  rx_offsets: Optional[Sequence[Optional[float]]] = None,
-                 early_exit: bool = False) -> "TaskPlan":
+                 early_exit: bool = False,
+                 exit_hop: Optional[int] = None) -> "TaskPlan":
         compute, tx = tuple(compute), tuple(tx)
         assert len(compute) == len(tx) + 1
         return cls(t_end=compute[0], t_tx=tx[0] if tx else 0.0,
                    t_cloud=compute[-1], early_exit=early_exit,
                    compute=compute, tx=tx,
                    tx_offsets=tuple(tx_offsets) if tx_offsets else (None,) * len(tx),
-                   rx_offsets=tuple(rx_offsets) if rx_offsets else (None,) * len(tx))
+                   rx_offsets=tuple(rx_offsets) if rx_offsets else (None,) * len(tx),
+                   exit_hop=exit_hop)
 
     @property
     def n_hops(self) -> int:
@@ -83,7 +90,8 @@ class TaskPlan:
             rxo.append(None)
         return sim.SimPlan(compute=tuple(comp), tx=tuple(tx),
                            tx_offset=tuple(txo), rx_offset=tuple(rxo),
-                           early_exit=self.early_exit)
+                           early_exit=self.early_exit,
+                           exit_hop=self.exit_hop)
 
 
 @dataclasses.dataclass
@@ -92,7 +100,8 @@ class TaskRecord:
     arrival: float
     done: float
     latency: float
-    early_exit: bool
+    early_exit: bool                      # exited before the last segment
+    exit_hop: Optional[int] = None        # segment it terminated at
 
 
 @dataclasses.dataclass
@@ -139,6 +148,15 @@ class PipelineResult:
     def exit_ratio(self) -> float:
         return float(np.mean([t.early_exit for t in self.tasks]))
 
+    def exit_hop_counts(self) -> dict:
+        """Histogram of hop-level exits: ``{segment: task count}`` over
+        the tasks that exited before the last segment."""
+        counts: dict = {}
+        for t in self.tasks:
+            if t.exit_hop is not None:
+                counts[t.exit_hop] = counts.get(t.exit_hop, 0) + 1
+        return dict(sorted(counts.items()))
+
     def stage_busy(self, stage: Union[str, Tuple[str, int]]) -> float:
         """Busy time of one resource: "end"/"link"/"cloud" (classic view)
         or ("compute", k) / ("link", k) for the general pipeline."""
@@ -156,9 +174,11 @@ class PipelineResult:
 
 
 def plan_from_stage_times(st: StageTimes, early_exit: bool = False,
-                          bits_scale: float = 1.0) -> TaskPlan:
-    """bits_scale rescales transmission time (online quant adjustment)."""
-    if early_exit:
+                          bits_scale: float = 1.0,
+                          exit_hop: Optional[int] = None) -> TaskPlan:
+    """bits_scale rescales transmission time (online quant adjustment);
+    ``exit_hop`` marks a hop-level semantic exit at that segment."""
+    if early_exit or exit_hop == 0:
         return TaskPlan(st.T_e, 0.0, 0.0, True)
     if st.n_hops == 1:
         return TaskPlan(st.T_e, st.T_t * bits_scale, st.T_c,
@@ -169,15 +189,16 @@ def plan_from_stage_times(st: StageTimes, early_exit: bool = False,
         tx=tuple(t * bits_scale for t in st.link),
         tx_offsets=tuple(min(st.tx_offsets[k], st.compute[k])
                          for k in range(st.n_hops)),
-        rx_offsets=st.rx_offsets)
+        rx_offsets=st.rx_offsets, exit_hop=exit_hop)
 
 
 def result_from_stream(res: sim.StreamResult) -> PipelineResult:
     """Wrap a raw resource timeline (from ``sim.simulate_stream`` or the
     async hop-queue executor) into the engine-facing result type."""
-    recs = [TaskRecord(i, arr, d, d - arr, ee)
-            for i, (arr, d, ee) in enumerate(zip(res.arrivals, res.done,
-                                                 res.early_exit))]
+    recs = [TaskRecord(i, arr, d, d - arr, ee, eh)
+            for i, (arr, d, ee, eh) in enumerate(zip(res.arrivals, res.done,
+                                                     res.early_exit,
+                                                     res.exit_hop))]
     return PipelineResult(recs, res.makespan, res.compute_busy,
                           res.link_busy,
                           compute_intervals=res.compute_intervals,

@@ -77,6 +77,21 @@ Edge = Tuple[int, int]
 Interval = Tuple[float, float]
 
 
+# --------------------------------------------------------- hop-exit helpers
+def occupies_compute(exit_hop: Optional[int], k: int) -> bool:
+    """Does a task with this ``exit_hop`` occupy compute resource ``k``?
+    ``exit_hop = e`` means the task terminates at segment ``e`` (a hop-level
+    semantic probe early-exited it there); ``None`` runs the full chain."""
+    return exit_hop is None or k <= exit_hop
+
+
+def occupies_link(exit_hop: Optional[int], k: int) -> bool:
+    """Does a task with this ``exit_hop`` occupy link resource ``k``?  A
+    task exiting at segment ``e`` crosses links ``0..e-1`` only — every
+    downstream link (and compute tier) is released at the exit instant."""
+    return exit_hop is None or k < exit_hop
+
+
 def _sorted_disjoint(iv: Sequence[Interval]) -> bool:
     return all(iv[i][0] <= iv[i][1] and
                (i + 1 == len(iv) or iv[i][1] <= iv[i + 1][0])
@@ -284,13 +299,21 @@ class SimPlan:
     ``tx_offset[k]`` (if set, and smaller than ``compute[k]``) lets hop
     ``k``'s transmission start that long after segment ``k``'s compute
     started (Fig. 4 virtual-block overlap); ``rx_offset[k]`` lets segment
-    ``k+1`` start that long after hop ``k``'s transmission started.  An
-    early-exit task runs only segment 0."""
+    ``k+1`` start that long after hop ``k``'s transmission started.
+
+    ``exit_hop = e`` terminates the task at segment ``e`` (a hop-level
+    semantic probe exited it on that tier): the task occupies compute
+    resources ``0..e`` and links ``0..e-1`` and never touches anything
+    downstream.  ``early_exit`` is the legacy boolean spelling of
+    ``exit_hop = 0`` (task runs only segment 0) and is kept in sync:
+    after normalization it is True iff the task exits before the last
+    segment."""
     compute: Tuple[float, ...]
     tx: Tuple[float, ...]
     tx_offset: Tuple[Optional[float], ...] = ()
     rx_offset: Tuple[Optional[float], ...] = ()
     early_exit: bool = False
+    exit_hop: Optional[int] = None
 
     def __post_init__(self):
         n_hops = len(self.tx)
@@ -299,6 +322,20 @@ class SimPlan:
             self.tx_offset = (None,) * n_hops
         if not self.rx_offset:
             self.rx_offset = (None,) * n_hops
+        if self.early_exit and self.exit_hop is None:
+            self.exit_hop = 0
+        if self.exit_hop is not None:
+            assert 0 <= self.exit_hop <= n_hops, \
+                f"exit_hop {self.exit_hop} outside [0, {n_hops}]"
+            if self.exit_hop == n_hops:   # "exit" at the cloud = full run
+                self.exit_hop = None
+        self.early_exit = self.exit_hop is not None
+
+    @property
+    def n_stages(self) -> int:
+        """Number of compute segments the task actually runs."""
+        return (self.exit_hop + 1) if self.exit_hop is not None \
+            else len(self.compute)
 
 
 @dataclasses.dataclass
@@ -309,7 +346,13 @@ class StreamResult:
     busy intervals (one ``(start, end)`` per task that occupied the
     resource, in admission order) — the raw timeline, exposed so an
     executor's recorded schedule can be compared against the simulator's
-    interval by interval."""
+    interval by interval.
+
+    ``early_exit[i]`` is True iff task ``i`` exited before the last
+    segment; ``exit_hop[i]`` names the segment it terminated at (``None``
+    = full pipeline).  Downstream of the exit, the task occupies nothing
+    — use ``occupies_compute``/``occupies_link`` to map a resource's
+    interval list back to the tasks that produced it."""
     arrivals: List[float]
     done: List[float]
     early_exit: List[bool]
@@ -318,6 +361,11 @@ class StreamResult:
     link_busy: Tuple[float, ...]
     compute_intervals: Tuple[Tuple[Interval, ...], ...] = ()
     link_intervals: Tuple[Tuple[Interval, ...], ...] = ()
+    exit_hop: List[Optional[int]] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.exit_hop:
+            self.exit_hop = [0 if e else None for e in self.early_exit]
 
 
 def simulate_stream(plans: Sequence[SimPlan],
@@ -329,7 +377,11 @@ def simulate_stream(plans: Sequence[SimPlan],
     Tasks are admitted in order; every resource is serial FIFO.  If
     ``links[k]`` carries a bandwidth trace, hop ``k``'s transfers are
     re-integrated at their actual start times (the planned duration is
-    interpreted as a bit volume at the link's nominal bandwidth)."""
+    interpreted as a bit volume at the link's nominal bandwidth).
+
+    A task with ``exit_hop = e`` terminates at segment ``e``: it runs
+    compute ``0..e`` and links ``0..e-1`` and releases every downstream
+    resource at the exit instant (hop-level semantic early exit)."""
     assert plans, "empty stream"
     n_hops = len(plans[0].tx)
     n_seg = n_hops + 1
@@ -341,19 +393,22 @@ def simulate_stream(plans: Sequence[SimPlan],
     link_iv: List[List[Interval]] = [[] for _ in range(n_hops)]
     done: List[float] = []
     exits: List[bool] = []
+    exit_hops: List[Optional[int]] = []
     for p, arr in zip(plans, arrivals):
         assert len(p.tx) == n_hops, "mixed hop counts in one stream"
+        e = p.exit_hop if p.exit_hop is not None else n_hops
         s = max(arr, compute_free[0])
         d = s + p.compute[0]
         compute_free[0] = d
         compute_busy[0] += p.compute[0]
         compute_iv[0].append((s, d))
-        if p.early_exit:
+        exits.append(p.exit_hop is not None)
+        exit_hops.append(p.exit_hop)
+        if e == 0:
             done.append(d)
-            exits.append(True)
             continue
         prev_start, prev_done = s, d
-        for k in range(n_hops):
+        for k in range(e):
             off = p.tx_offset[k]
             tx_ready = prev_done if off is None or off >= p.compute[k] \
                 else prev_start + off
@@ -379,7 +434,6 @@ def simulate_stream(plans: Sequence[SimPlan],
             compute_iv[k + 1].append((c_start, c_start + p.compute[k + 1]))
             prev_start, prev_done = c_start, c_done
         done.append(prev_done)
-        exits.append(False)
     arrivals = list(arrivals[:len(done)])
     makespan = max(done) - min(arrivals)
     return StreamResult(arrivals=arrivals, done=done, early_exit=exits,
@@ -387,7 +441,8 @@ def simulate_stream(plans: Sequence[SimPlan],
                         compute_busy=tuple(compute_busy),
                         link_busy=tuple(link_busy),
                         compute_intervals=tuple(tuple(iv) for iv in compute_iv),
-                        link_intervals=tuple(tuple(iv) for iv in link_iv))
+                        link_intervals=tuple(tuple(iv) for iv in link_iv),
+                        exit_hop=exit_hops)
 
 
 # ============================================================ multi-tenant
@@ -452,9 +507,11 @@ class MultiTenantStreamResult:
     global slot ``j``.  ``n_tenants`` is the declared tenant count (not
     derived from ``order`` — a tenant that admitted zero tasks still
     counts).  Per-resource busy intervals follow the same slot order
-    (downstream resources skip early-exited slots), so an executor's
-    recorded multi-tenant schedule can be compared per tenant as well as
-    per resource."""
+    (a resource's interval list only contains the slots that occupy it —
+    a task exiting at segment ``e`` occupies compute ``0..e`` and links
+    ``0..e-1``; see ``occupies_compute``/``occupies_link``), so an
+    executor's recorded multi-tenant schedule can be compared per tenant
+    as well as per resource."""
     stream: StreamResult
     order: Tuple[TenantSlot, ...]
     n_tenants: int = 0
@@ -472,6 +529,10 @@ class MultiTenantStreamResult:
         slots = self.tenant_slots(tenant)
         return ([s.arrivals[j] for j in slots], [s.done[j] for j in slots],
                 [s.early_exit[j] for j in slots])
+
+    def tenant_exit_hops(self, tenant: int) -> List[Optional[int]]:
+        """Per-task exit hops of one tenant, in per-tenant order."""
+        return [self.stream.exit_hop[j] for j in self.tenant_slots(tenant)]
 
     def tenant_latencies(self, tenant: int) -> List[float]:
         arr, done, _ = self.tenant_view(tenant)

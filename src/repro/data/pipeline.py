@@ -52,6 +52,10 @@ class Task:
     id: int
     label: int
     features: np.ndarray  # frontend features (the end segment's input)
+    # per-boundary activations for hop-level probes: row k feeds the
+    # semantic probe at segment k (row 0 == ``features``); None when the
+    # stream models a single probe depth
+    hop_features: Optional[np.ndarray] = None
 
 
 class CorrelatedTaskStream:
@@ -62,13 +66,23 @@ class CorrelatedTaskStream:
                   "high"   — runs of ~20 (sequential videos)
     Class c's features ~ N(mu_c, sigma_c I); sigma varies per class so some
     tasks need higher quantization precision (Fig. 1b clusters).
+
+    ``n_probe_depths > 1`` additionally emits per-boundary activations
+    (``Task.hop_features``): depth ``k``'s features shrink the scene/noise
+    displacement by ``depth_decay ** k`` — deeper layers concentrate class
+    evidence (the SPINN-style progressive-inference observation), so
+    deeper semantic probes separate tasks the shallow probe could not.
+    Depth 0 is bit-identical to ``features`` and the rng draw sequence
+    does not depend on ``n_probe_depths`` (seeded streams stay exactly
+    reproducible across the classic and hop-level configurations).
     """
 
     RUN = {"low": 1, "medium": 5, "high": 20}
 
     def __init__(self, n_labels: int = 20, dim: int = 64,
                  correlation: str = "medium", seed: int = 0,
-                 label_skew: float = 1.2, drift: float = 0.1):
+                 label_skew: float = 1.2, drift: float = 0.1,
+                 n_probe_depths: int = 1, depth_decay: float = 0.5):
         rng = np.random.default_rng(seed)
         self.rng = rng
         self.n_labels = n_labels
@@ -80,6 +94,9 @@ class CorrelatedTaskStream:
         # with temporal correlation the semantic cache tracks the drift and
         # stays separable; uncorrelated streams leave centers stale
         self.drift = drift
+        assert n_probe_depths >= 1 and 0.0 < depth_decay <= 1.0
+        self.n_probe_depths = n_probe_depths
+        self.depth_decay = depth_decay
         self.run = self.RUN[correlation]
         w = 1.0 / np.arange(1, n_labels + 1) ** label_skew  # long-tail
         self.label_p = w / w.sum()
@@ -100,9 +117,14 @@ class CorrelatedTaskStream:
     def next_task(self) -> Task:
         j = self._next_label()
         self._scene += self.rng.normal(size=self.dim) * self.drift  # pan/zoom
-        f = (self.mu[j] + self._scene
-             + self.rng.normal(size=self.dim) * 0.3 * self.sigma[j])
-        t = Task(self._id, j, f.astype(np.float32))
+        disp = self._scene + self.rng.normal(size=self.dim) * 0.3 * self.sigma[j]
+        f = self.mu[j] + disp
+        hop_feats = None
+        if self.n_probe_depths > 1:
+            hop_feats = np.stack([
+                (self.mu[j] + disp * self.depth_decay ** k).astype(np.float32)
+                for k in range(self.n_probe_depths)])
+        t = Task(self._id, j, f.astype(np.float32), hop_features=hop_feats)
         self._id += 1
         return t
 
@@ -124,3 +146,28 @@ def make_calibration_set(stream: CorrelatedTaskStream, n: int = 500,
         labels.append(j)
     stream._cur_label, stream._left = saved
     return np.stack(feats), np.asarray(labels)
+
+
+def make_hop_calibration_sets(stream: CorrelatedTaskStream, n: int = 500,
+                              n_depths: Optional[int] = None, seed: int = 1):
+    """Per-boundary calibration sets for hop-level probes: one
+    ``(features, labels)`` pair per probe depth, drawn iid with the same
+    depth attenuation the stream applies (depth 0 reproduces
+    ``make_calibration_set`` exactly for the same seed, so the end
+    device's classic calibration is the ``n_depths = 1`` special case)."""
+    if n_depths is None:
+        n_depths = stream.n_probe_depths
+    assert n_depths >= 1
+    rng = np.random.default_rng(seed)
+    feats = [[] for _ in range(n_depths)]
+    labels = []
+    for _ in range(n):
+        j = int(rng.choice(stream.n_labels, p=stream.label_p))
+        disp = rng.normal(size=stream.dim) * stream.sigma[j]
+        for k in range(n_depths):
+            feats[k].append(
+                (stream.mu0[j] + disp * stream.depth_decay ** k
+                 ).astype(np.float32))
+        labels.append(j)
+    labels = np.asarray(labels)
+    return [(np.stack(f), labels) for f in feats]

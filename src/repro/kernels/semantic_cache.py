@@ -57,17 +57,27 @@ def _probe_kernel(x_ref, c_ref, sep_ref, best_ref, sims_ref, acc_ref, *,
 def semantic_probe(x: jnp.ndarray, centers: jnp.ndarray,
                    block_b: int = 8, block_s: int = 512,
                    interpret: bool | None = None):
-    """x: (B,S,D), centers: (L,D) -> (sep (B,), best (B,), sims (B,L))."""
+    """x: (B,S,D), centers: (L,D) -> (sep (B,), best (B,), sims (B,L)).
+
+    ``B``/``S`` need not divide the block sizes: the batch and sequence
+    axes are zero-padded up to block multiples and the pad rows sliced
+    off.  The GAP epilogue divides the VMEM accumulator by the *true*
+    ``S``, so sequence padding contributes exactly zero to the mean and
+    the padded result is bit-identical to the unpadded one."""
     B, S, D = x.shape
     L = centers.shape[0]
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     bb = min(block_b, B)
     bs = min(block_s, S)
-    assert B % bb == 0 and S % bs == 0
-    grid = (B // bb, S // bs)
+    pad_b = -B % bb
+    pad_s = -S % bs
+    if pad_b or pad_s:
+        x = jnp.pad(x, ((0, pad_b), (0, pad_s), (0, 0)))
+    Bp, Sp = B + pad_b, S + pad_s
+    grid = (Bp // bb, Sp // bs)
     sep, best, sims = pl.pallas_call(
-        functools.partial(_probe_kernel, n_s_blocks=S // bs, seq_len=S),
+        functools.partial(_probe_kernel, n_s_blocks=Sp // bs, seq_len=S),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bb, bs, D), lambda i, j: (i, j, 0)),
@@ -79,11 +89,11 @@ def semantic_probe(x: jnp.ndarray, centers: jnp.ndarray,
             pl.BlockSpec((bb, L), lambda i, j: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, 1), jnp.float32),
-            jax.ShapeDtypeStruct((B, 1), jnp.int32),
-            jax.ShapeDtypeStruct((B, L), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, L), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bb, D), jnp.float32)],
         interpret=interpret,
     )(x, centers)
-    return sep[:, 0], best[:, 0], sims
+    return sep[:B, 0], best[:B, 0], sims[:B]

@@ -343,7 +343,7 @@ class AsyncHopPipeline:
         comp_iv: List[List[sim.Interval]] = [[] for _ in range(n_seg)]
         link_iv: List[List[sim.Interval]] = [[] for _ in range(n_hops)]
         done = [0.0] * n_tasks
-        exits = [False] * n_tasks
+        exit_hops: List[Optional[int]] = [None] * n_tasks
         arrs = [0.0] * n_tasks if admit_fn is not None \
             else list(arrivals[:n_tasks])
         self.outputs = {}
@@ -384,14 +384,18 @@ class AsyncHopPipeline:
                 comp_busy[k] += comp
                 comp_iv[k].append((start, start + comp))
                 data_done = msg.data_done
-                last = k == n_hops or p.early_exit
+                # a hop-level semantic exit at segment ``exit_hop``
+                # terminates the task on this worker: nothing is ever
+                # forwarded, so every downstream resource is released
+                last = k == n_hops or \
+                    (p.exit_hop is not None and k >= p.exit_hop)
                 off = None if last else p.tx_offset[k]
                 if last or off is None or off >= comp:   # serial stage
                     await clock.sleep(comp)
                     await clock.sleep_until(data_done)   # c_done gate
                     if last:
                         done[msg.idx] = clock.now
-                        exits[msg.idx] = p.early_exit
+                        exit_hops[msg.idx] = p.exit_hop
                         self.outputs[msg.idx] = msg.payload
                     else:
                         await qout.put(_Msg(msg.idx, p, ready_at=clock.now,
@@ -452,11 +456,13 @@ class AsyncHopPipeline:
 
         self.clock.run(main())
         return sim.StreamResult(
-            arrivals=arrs, done=done, early_exit=exits,
+            arrivals=arrs, done=done,
+            early_exit=[eh is not None for eh in exit_hops],
             makespan=max(done) - min(arrs),
             compute_busy=tuple(comp_busy), link_busy=tuple(link_busy),
             compute_intervals=tuple(tuple(iv) for iv in comp_iv),
-            link_intervals=tuple(tuple(iv) for iv in link_iv))
+            link_intervals=tuple(tuple(iv) for iv in link_iv),
+            exit_hop=exit_hops)
 
 
 def run_pipeline_async(plans: Sequence[TaskPlan],

@@ -43,6 +43,12 @@ class EngineStats:
     wire_kb_per_task: float
     accuracy: float
 
+    @property
+    def exit_hops(self) -> dict:
+        """``{segment: count}`` of hop-level semantic exits (segment 0 =
+        the classic end-device exit; >= 1 = an intermediate tier)."""
+        return self.pipeline.exit_hop_counts()
+
 
 class EngineBase:
     """Offline plan + online decision layer shared by both engines."""
@@ -54,10 +60,19 @@ class EngineBase:
                  cfg: Optional[EngineConfig] = None,
                  boundary_elems: Optional[int] = None,
                  links: Optional[Sequence[LinkProfile]] = None,
-                 hop_bits_offline: Optional[Sequence[int]] = None):
+                 hop_bits_offline: Optional[Sequence[int]] = None,
+                 hop_calib: Optional[Sequence[Tuple[np.ndarray,
+                                                    np.ndarray]]] = None):
         """``links`` (one per hop, first = the end device's uplink)
         activates the multi-hop path; omitting it keeps the classic
         end->link->cloud deployment with ``link`` as the only hop.
+
+        ``hop_calib`` activates hop-level semantic early exit: one
+        ``(features, labels)`` calibration set per *intermediate* tier
+        (segments ``1..n_hops-1``, e.g. ``make_hop_calibration_sets(
+        stream, n, n_hops)[1:]``), each calibrating that boundary's own
+        semantic cache and exit threshold.  Omitting it keeps the classic
+        behavior: the only probe runs on the end device.
 
         ``hop_bits_offline`` is the offline partition's per-hop boundary
         precision (e.g. the mean of ``decision.all_hop_bits[k]``); it is
@@ -93,19 +108,41 @@ class EngineBase:
             max(1, int(self.st.link[k] * self.links[k].bandwidth_bps
                        / offline_bits[k]))
             for k in range(1, self.st.n_hops)]
+        hop_probes = None
+        if hop_calib is not None:
+            assert len(hop_calib) == self.st.n_hops - 1, \
+                "need one calibration set per intermediate tier"
+            hop_probes = ON.build_hop_probes(hop_calib, n_labels,
+                                             eps=cfg.eps,
+                                             bit_levels=cfg.bits_levels)
         self.sched = ON.OnlineScheduler(
             self.cache, self.th, elems, stage_times.T_e, stage_times.T_c,
             update_centers=cfg.update_centers,
-            hop_elems=hop_elems, stage_compute=stage_times.compute)
+            hop_elems=hop_elems, stage_compute=stage_times.compute,
+            hop_probes=hop_probes)
 
     # ------------------------------------------------------------ decisions
+    @staticmethod
+    def _hop_feats(feats) -> np.ndarray:
+        """Normalize classify features to per-boundary rows: a 1-D vector
+        becomes the single row every probe reuses; a 2-D array maps row
+        ``k`` to the probe at segment ``k``."""
+        f = np.asarray(feats)
+        return f if f.ndim == 2 else f[None]
+
     def decide(self, task, bw: float, classify):
         """One COACH online decision (Eq. 10/11).  ``classify(task) ->
         (features, predicted_label)``: the caller runs the real model
-        (CollabRuntime) or a proxy.  Identical call sequence in both
-        engines, so a seeded stream yields identical decisions."""
+        (CollabRuntime) or a proxy; ``features`` may be a single vector
+        or a per-boundary ``(n_probes, dim)`` stack (hop-level exits).
+        Identical call sequence in every engine, so a seeded stream
+        yields identical decisions."""
         feats, pred = classify(task)
-        dec = self.sched.step(feats, bandwidth_bps=bw)
+        hop_feats = self._hop_feats(feats)
+        if self.sched.hop_probes:
+            dec = self.sched.step_cascade(hop_feats, bandwidth_bps=bw)
+        else:
+            dec = self.sched.step(hop_feats[0], bandwidth_bps=bw)
         return dec, feats, pred
 
     def plan_for(self, dec: ON.OnlineDecision, bw: float,
@@ -117,7 +154,10 @@ class EngineBase:
         adaptive precision retimes only the end device's uplink and the
         inner hops keep their offline-planned occupation (the sync
         reference semantics); with ``hop_bits`` every hop is retimed from
-        its chosen precision and bandwidth EMA (per-hop adaptive bits)."""
+        its chosen precision and bandwidth EMA (per-hop adaptive bits).
+        A hop-level exit (``dec.exit_hop = k >= 1``) carries full-length
+        stage durations plus the exit marker: the executors run compute
+        ``0..k`` / links ``0..k-1`` and release everything downstream."""
         st = self.st
         if dec.early_exit:
             return TaskPlan(st.T_e, 0.0, 0.0, True), 0.0
@@ -143,7 +183,31 @@ class EngineBase:
             compute=st.compute, tx=tx,
             tx_offsets=tuple(min(st.tx_offsets[k], st.compute[k])
                              for k in range(st.n_hops)),
-            rx_offsets=st.rx_offsets), wire_bits
+            rx_offsets=st.rx_offsets, exit_hop=dec.exit_hop), wire_bits
+
+    def account(self, dec: ON.OnlineDecision, feats, pred, task,
+                wire_bits: float, acc: dict) -> None:
+        """Shared decision accounting + label feedback (identical in the
+        sync, async, and multi-tenant engines, so the three can never
+        diverge).  ``acc`` accumulates ``exits`` (int), ``wire`` (float,
+        bits), ``bits`` (list), ``correct`` (list)."""
+        hop_feats = self._hop_feats(feats)
+        if dec.exit_hop == 0:         # classic end-device exit: no wire
+            acc["exits"] += 1
+            acc["correct"].append(dec.result == task.label)
+            return
+        acc["bits"].append(dec.bits or self.cfg.default_bits)
+        acc["wire"] += wire_bits
+        if dec.exit_hop is not None:  # exited at an intermediate tier
+            acc["exits"] += 1
+            acc["correct"].append(dec.result == task.label)
+            # the tier's result flows back down: refresh the probes the
+            # task crossed (the exiting tier already self-updated)
+            self.sched.report_label_hops(hop_feats, dec.result,
+                                         upto=dec.exit_hop)
+        else:                         # full pipeline: true label feedback
+            acc["correct"].append(pred == task.label)
+            self.sched.report_label_hops(hop_feats, task.label)
 
     def admit_plan(self, task, bw: float, t_bw: float, classify,
                    acc: dict) -> TaskPlan:
@@ -158,23 +222,17 @@ class EngineBase:
         engine, so decision accounting can never diverge between them."""
         dec, feats, pred = self.decide(task, bw, classify)
         hop_bits = None
-        if dec.early_exit:
-            acc["exits"] += 1
-            acc["correct"].append(dec.result == task.label)
-        else:
-            if self.cfg.per_hop_bits and self.st.n_hops > 1:
-                for k in range(1, self.st.n_hops):
-                    self.sched.observe_hop_bandwidth(
-                        k, self.links[k].bps_at(t_bw))
-                # hop 0 keeps the Eq. 11 choice already in dec.bits
-                chosen = self.sched.choose_hop_bits(
-                    dec.required_bits or self.cfg.default_bits)
-                hop_bits = (dec.bits or self.cfg.default_bits,) + chosen[1:]
-            acc["bits"].append(dec.bits or self.cfg.default_bits)
-            acc["correct"].append(pred == task.label)
-            self.sched.report_label(feats, task.label)
+        if not dec.early_exit and self.cfg.per_hop_bits \
+                and self.st.n_hops > 1:
+            for k in range(1, self.st.n_hops):
+                self.sched.observe_hop_bandwidth(
+                    k, self.links[k].bps_at(t_bw))
+            # hop 0 keeps the Eq. 11 choice already in dec.bits
+            chosen = self.sched.choose_hop_bits(
+                dec.required_bits or self.cfg.default_bits)
+            hop_bits = (dec.bits or self.cfg.default_bits,) + chosen[1:]
         plan, wire_bits = self.plan_for(dec, bw, hop_bits=hop_bits)
-        acc["wire"] += wire_bits
+        self.account(dec, feats, pred, task, wire_bits, acc)
         return plan
 
     # ------------------------------------------------------------ reporting

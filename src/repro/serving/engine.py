@@ -41,24 +41,19 @@ class CoachEngine(EngineBase):
                    classify) -> EngineStats:
         """classify(task) -> (features, predicted_label): the caller runs
         the real model (CollabRuntime) or a proxy; the engine makes the
-        COACH decisions and accounts the pipeline."""
-        plans, bits_used, correct = [], [], []
-        exits = 0
-        wire_bits_total = 0.0
+        COACH decisions — including hop-level semantic exits when the
+        engine was built with ``hop_calib`` — and accounts the pipeline
+        (decision accounting shared with the async/multi-tenant engines
+        via ``EngineBase.account``)."""
+        plans = []
+        acc = {"exits": 0, "wire": 0.0, "bits": [], "correct": []}
         for task in tasks:
             bw = self.link.bps_at(arrival_period * task.id)
             dec, feats, pred = self.decide(task, bw, classify)
             plan, wire_bits = self.plan_for(dec, bw)
             plans.append(plan)
-            if dec.early_exit:
-                exits += 1
-                correct.append(dec.result == task.label)
-            else:
-                bits_used.append(dec.bits or self.cfg.default_bits)
-                wire_bits_total += wire_bits
-                correct.append(pred == task.label)
-                self.sched.report_label(feats, task.label)
+            self.account(dec, feats, pred, task, wire_bits, acc)
         pr = run_pipeline(plans, arrival_period=arrival_period,
                           links=self.links)
-        return self._stats(pr, len(tasks), exits, bits_used,
-                           wire_bits_total, correct)
+        return self._stats(pr, len(tasks), acc["exits"], acc["bits"],
+                           acc["wire"], acc["correct"])

@@ -106,10 +106,11 @@ def task_count_cost(plan: sim.SimPlan) -> float:
 
 def service_time_cost(plan: sim.SimPlan) -> float:
     """WDRR cost: the task's total resource demand in seconds (heavier
-    tasks consume proportionally more of their tenant's share)."""
-    if plan.early_exit:
-        return plan.compute[0]
-    return float(sum(plan.compute) + sum(plan.tx))
+    tasks consume proportionally more of their tenant's share).  A task
+    exiting at segment ``e`` only demands compute ``0..e`` and links
+    ``0..e-1``."""
+    e = plan.exit_hop if plan.exit_hop is not None else len(plan.tx)
+    return float(sum(plan.compute[:e + 1]) + sum(plan.tx[:e]))
 
 
 class AdmissionPolicy:
@@ -393,8 +394,9 @@ def tenant_pipeline_result(mt: sim.MultiTenantStreamResult,
     s = mt.stream
     slots = mt.tenant_slots(tenant)
     arr, done, exits = mt.tenant_view(tenant)
-    recs = [TaskRecord(i, a, d, d - a, e)
-            for i, (a, d, e) in enumerate(zip(arr, done, exits))]
+    ehs = mt.tenant_exit_hops(tenant)
+    recs = [TaskRecord(i, a, d, d - a, e, eh)
+            for i, (a, d, e, eh) in enumerate(zip(arr, done, exits, ehs))]
     makespan = (max(done) - min(arr)) if done else 0.0
     n_seg = len(s.compute_busy)
     n_hops = len(s.link_busy)
@@ -402,21 +404,27 @@ def tenant_pipeline_result(mt: sim.MultiTenantStreamResult,
     comp_iv: List[List[sim.Interval]] = [[] for _ in range(n_seg)]
     link_iv: List[List[sim.Interval]] = [[] for _ in range(n_hops)]
     if s.compute_intervals:
-        comp_iv[0] = [s.compute_intervals[0][j] for j in slots]
-        # downstream resources skip early-exited slots: map each of the
-        # tenant's full-pipeline slots to its position in that ordering
-        pos = -1
-        positions = []
-        for j in range(len(mt.order)):
-            if s.early_exit[j]:
-                continue
-            pos += 1
-            if j in slotset:
-                positions.append(pos)
-        for k in range(1, n_seg):
-            comp_iv[k] = [s.compute_intervals[k][p] for p in positions]
+        # a resource's interval list only contains the slots that occupy
+        # it (a task exiting at segment e occupies compute 0..e and links
+        # 0..e-1): map each tenant slot to its position in that per-
+        # resource ordering
+        def _slice(intervals, occupies):
+            pos = -1
+            out = []
+            for j in range(len(mt.order)):
+                if not occupies(s.exit_hop[j]):
+                    continue
+                pos += 1
+                if j in slotset:
+                    out.append(intervals[pos])
+            return out
+
+        for k in range(n_seg):
+            comp_iv[k] = _slice(s.compute_intervals[k],
+                                lambda eh, k=k: sim.occupies_compute(eh, k))
         for k in range(n_hops):
-            link_iv[k] = [s.link_intervals[k][p] for p in positions]
+            link_iv[k] = _slice(s.link_intervals[k],
+                                lambda eh, k=k: sim.occupies_link(eh, k))
     return PipelineResult(
         recs, makespan,
         compute_busy=tuple(sum(e - st for (st, e) in iv) for iv in comp_iv),
@@ -492,18 +500,21 @@ class MultiTenantCoachEngine:
                  policy: AdmissionPolicy | str = "fifo",
                  cfg: Optional[EngineConfig] = None,
                  boundary_elems: Optional[int] = None,
-                 links=None, hop_bits_offline=None):
+                 links=None, hop_bits_offline=None, hop_calib=None):
         assert tenants, "need at least one tenant"
         self.tenants = list(tenants)
         self.cfg = cfg if cfg is not None else EngineConfig()
         # one private engine state per tenant (fresh config copy each, so
-        # a tenant-level config edit can never leak across tenants)
+        # a tenant-level config edit can never leak across tenants; each
+        # tenant also calibrates its own hop probes from hop_calib, so
+        # hop-level exit decisions stay tenant-isolated)
         self.engines: List[EngineBase] = [
             EngineBase(runtime, stage_times, end_dev, link, cloud_dev,
                        n_labels, calib_feats, calib_labels,
                        cfg=dataclasses.replace(self.cfg),
                        boundary_elems=boundary_elems, links=links,
-                       hop_bits_offline=hop_bits_offline)
+                       hop_bits_offline=hop_bits_offline,
+                       hop_calib=hop_calib)
             for _ in self.tenants]
         self.links = self.engines[0].links
         self.policy = make_policy(policy,

@@ -19,7 +19,8 @@ from repro.core.pipeline import (TaskPlan, bandwidth_step_trace,
                                  plan_from_stage_times, run_pipeline)
 from repro.core.schedule import PartitionDecision, StageTimes, \
     evaluate_partition
-from repro.data.pipeline import CorrelatedTaskStream, make_calibration_set
+from repro.data.pipeline import (CorrelatedTaskStream, make_calibration_set,
+                                 make_hop_calibration_sets)
 from repro.serving.async_engine import (AsyncCoachEngine, AsyncHopPipeline,
                                         VirtualClock, run_pipeline_async)
 from repro.serving.base import EngineConfig
@@ -49,7 +50,10 @@ def _random_single_hop_plans(seed, n=40):
     return plans
 
 
-def _random_multihop_plans(seed, n=40, n_hops=2):
+def _random_multihop_plans(seed, n=40, n_hops=2, hop_exits=True):
+    """Random streams mixing full-pipeline tasks, classic end-device
+    exits, and (for ``n_hops >= 2``) hop-level semantic exits at every
+    intermediate segment."""
     rng = np.random.RandomState(seed)
     plans = []
     for _ in range(n):
@@ -62,7 +66,11 @@ def _random_multihop_plans(seed, n=40, n_hops=2):
                for k in range(n_hops)]
         rxo = [rng.uniform(0, tx[k]) if rng.rand() < 0.5 else None
                for k in range(n_hops)]
-        plans.append(TaskPlan.multihop(comp, tx, txo, rxo))
+        exit_hop = None
+        if hop_exits and n_hops >= 2 and rng.rand() < 0.25:
+            exit_hop = int(rng.randint(1, n_hops))  # mid-pipeline exit
+        plans.append(TaskPlan.multihop(comp, tx, txo, rxo,
+                                       exit_hop=exit_hop))
     return plans
 
 
@@ -71,6 +79,7 @@ def _assert_timelines_agree(pr_sim, pr_async, tol=TOL):
     assert len(pr_sim.tasks) == len(pr_async.tasks)
     for a, b in zip(pr_sim.tasks, pr_async.tasks):
         assert a.id == b.id and a.early_exit == b.early_exit
+        assert a.exit_hop == b.exit_hop, a.id
         assert abs(a.done - b.done) < tol, a.id
         assert abs(a.latency - b.latency) < tol, a.id
     assert len(pr_sim.compute_busy) == len(pr_async.compute_busy)
@@ -144,6 +153,56 @@ def test_differential_irregular_arrivals():
     pr_sim = run_pipeline(plans, arrivals=arrivals)
     pr_async = run_pipeline_async(plans, arrivals=arrivals)
     _assert_timelines_agree(pr_sim, pr_async)
+
+
+# ------------------------------------------------- hop-level semantic exit
+def test_differential_exit_at_hop_1_of_3_hop_chain():
+    """Acceptance: tasks exiting at hop 1 of a 3-hop chain — executor ==
+    simulator at 1e-6, and the exit releases every downstream resource
+    (links >= 1 and computes >= 2 never see the exited tasks)."""
+    rng = np.random.RandomState(13)
+    plans = []
+    for i in range(36):
+        comp = rng.uniform(1e-3, 4e-3, 4)
+        tx = rng.uniform(0.2e-3, 3e-3, 3)
+        plans.append(TaskPlan.multihop(
+            comp, tx, exit_hop=1 if i % 3 == 0 else None))
+    pr_sim = run_pipeline(plans, arrival_period=2e-3)
+    pr_async = run_pipeline_async(plans, arrival_period=2e-3)
+    _assert_timelines_agree(pr_sim, pr_async)
+    n_exit = sum(1 for p in plans if p.exit_hop == 1)
+    assert n_exit > 0
+    for pr in (pr_sim, pr_async):
+        assert pr.exit_hop_counts() == {1: n_exit}
+        # exited tasks occupy compute 0-1 and link 0 only
+        assert len(pr.compute_intervals[0]) == len(plans)
+        assert len(pr.compute_intervals[1]) == len(plans)
+        assert len(pr.link_intervals[0]) == len(plans)
+        for k in (2, 3):
+            assert len(pr.compute_intervals[k]) == len(plans) - n_exit
+        for k in (1, 2):
+            assert len(pr.link_intervals[k]) == len(plans) - n_exit
+
+
+def test_exit_hop_releases_downstream_and_cuts_bubbles():
+    """The point of hop-level exit: on a stream where half the tasks
+    terminate at the edge tier, the cloud's busy time drops by exactly
+    the exited tasks' cloud occupation, and every exited task finishes
+    no later than its full-pipeline twin."""
+    comp, tx = (2e-3, 1.5e-3, 2e-3), (1e-3, 1e-3)
+    full = [TaskPlan.multihop(comp, tx) for _ in range(40)]
+    mixed = [TaskPlan.multihop(comp, tx, exit_hop=1 if i % 2 else None)
+             for i in range(40)]
+    pf = run_pipeline(full, arrival_period=2.2e-3)
+    pm = run_pipeline(mixed, arrival_period=2.2e-3)
+    n_exit = sum(1 for p in mixed if p.exit_hop is not None)
+    assert abs(pf.compute_busy[2] - pm.compute_busy[2]
+               - n_exit * comp[2]) < TOL
+    assert abs(pf.link_busy_hops[1] - pm.link_busy_hops[1]
+               - n_exit * tx[1]) < TOL
+    for a, b in zip(pf.tasks, pm.tasks):
+        assert b.done <= a.done + TOL
+    assert pm.makespan < pf.makespan - TOL
 
 
 # ------------------------------------------- overlap on a benchmark stream
@@ -230,7 +289,7 @@ def test_virtual_clock_deadlock_detected():
 
 
 # --------------------------------------------- decisions: async == sync
-def _mk_engines(n_hops, seed=0, **cfg_kw):
+def _mk_engines(n_hops, seed=0, hop_exit=False, **cfg_kw):
     if n_hops == 1:
         st = StageTimes(T_e=2e-3, T_t=3e-3, T_c=2e-3, T_t_par=0,
                         T_c_par=0, latency=7e-3, first_tx_offset=2e-3,
@@ -244,13 +303,21 @@ def _mk_engines(n_hops, seed=0, **cfg_kw):
             link_par=(0.0, 0.0), compute_par=(0.0, 0.0),
             tx_offsets=(2e-3, 1.5e-3), rx_offsets=(3e-3, 1e-3))
         links = [LinkProfile("uplink", 20e6), LinkProfile("backhaul", 900e6)]
+    depths = n_hops if hop_exit else 1
     stream = CorrelatedTaskStream(n_labels=30, dim=48,
-                                  correlation="medium", seed=seed)
-    feats, labels = make_calibration_set(stream, 400)
+                                  correlation="medium", seed=seed,
+                                  n_probe_depths=depths)
+    hop_calib = None
+    if hop_exit:
+        sets = make_hop_calibration_sets(stream, 400, n_depths=n_hops)
+        feats, labels = sets[0]
+        hop_calib = sets[1:]
+    else:
+        feats, labels = make_calibration_set(stream, 400)
     mk = lambda cls, cfg: cls(
         None, st, END, LinkProfile("wifi", 20e6), CLOUD, n_labels=30,
         calib_feats=feats, calib_labels=labels, boundary_elems=50_000,
-        links=links, cfg=cfg)
+        links=links, cfg=cfg, hop_calib=hop_calib)
     sync = mk(CoachEngine, None)
     async_ = mk(AsyncCoachEngine, EngineConfig(**cfg_kw) if cfg_kw else None)
     return sync, async_, stream
@@ -259,7 +326,9 @@ def _mk_engines(n_hops, seed=0, **cfg_kw):
 def _classify(stream):
     def f(task):
         d = np.linalg.norm(stream.mu - task.features[None], axis=1)
-        return task.features, int(np.argmin(d))
+        feats = task.hop_features if task.hop_features is not None \
+            else task.features
+        return feats, int(np.argmin(d))
     return f
 
 
@@ -291,6 +360,65 @@ def test_async_engine_timeline_matches_sync_reference(n_hops):
                           classify=_classify(stream))
     _assert_timelines_agree(s.pipeline, a.pipeline)
     assert abs(a.wire_kb_per_task - s.wire_kb_per_task) < 1e-9
+
+
+def test_hop_exit_engine_decisions_identical_sync_async():
+    """With per-hop probes calibrated, a seeded stream exits tasks at the
+    intermediate tier — and the sync and async engines still make bit-
+    identical decisions (exit hops included)."""
+    sync, async_, stream = _mk_engines(2, seed=4, hop_exit=True)
+    tasks = stream.tasks(300)
+    s = sync.run_stream(list(tasks), arrival_period=3e-3,
+                        classify=_classify(stream))
+    a = async_.run_stream(list(tasks), arrival_period=3e-3,
+                          classify=_classify(stream))
+    assert a.exit_ratio == s.exit_ratio
+    assert a.mean_bits == s.mean_bits
+    assert a.accuracy == s.accuracy
+    assert a.exit_hops == s.exit_hops
+    # the new axis is real: some tasks exited at the edge tier (hop 1),
+    # on top of the classic end-device exits
+    assert s.exit_hops.get(1, 0) > 0, s.exit_hops
+    assert s.exit_hops.get(0, 0) > 0, s.exit_hops
+
+
+def test_hop_exit_engine_timeline_matches_sync_reference():
+    """Acceptance (engine level): with hop probes active, per-hop
+    retiming off and unbounded queues, the async engine's virtual-clock
+    timeline — mid-pipeline exits included — equals the sync engine's
+    simulated one at 1e-6."""
+    sync, async_, stream = _mk_engines(
+        2, seed=6, hop_exit=True, per_hop_bits=False, queue_capacity=0)
+    tasks = stream.tasks(250)
+    s = sync.run_stream(list(tasks), arrival_period=3e-3,
+                        classify=_classify(stream))
+    a = async_.run_stream(list(tasks), arrival_period=3e-3,
+                          classify=_classify(stream))
+    _assert_timelines_agree(s.pipeline, a.pipeline)
+    assert abs(a.wire_kb_per_task - s.wire_kb_per_task) < 1e-9
+    assert s.pipeline.exit_hop_counts().get(1, 0) > 0
+
+
+def test_hop_exit_engine_releases_downstream_resources():
+    """Engine level resource release: the cloud serves exactly the tasks
+    no probe exited, the backhaul carries exactly those too, and the
+    uplink additionally carries the hop-1 exits (they were transmitted
+    once, then terminated at the edge tier)."""
+    _, hop, stream = _mk_engines(2, seed=11, hop_exit=True,
+                                 per_hop_bits=False)
+    n = 250
+    tasks = stream.tasks(n)
+    h = hop.run_stream(list(tasks), arrival_period=3e-3,
+                       classify=_classify(stream))
+    e0 = h.exit_hops.get(0, 0)
+    e1 = h.exit_hops.get(1, 0)
+    assert e0 > 0 and e1 > 0, h.exit_hops
+    pr = h.pipeline
+    assert len(pr.compute_intervals[0]) == n
+    assert len(pr.link_intervals[0]) == n - e0
+    assert len(pr.compute_intervals[1]) == n - e0
+    assert len(pr.link_intervals[1]) == n - e0 - e1
+    assert len(pr.compute_intervals[2]) == n - e0 - e1
 
 
 def test_async_engine_per_hop_bits_retimes_inner_hop():

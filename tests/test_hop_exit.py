@@ -1,0 +1,174 @@
+"""Hop-level semantic early exit: probe cascade, per-boundary
+calibration, exit_hop plan semantics, and resource release in the event
+simulator (the serving-layer differentials live in test_async_engine /
+test_tenancy)."""
+
+import numpy as np
+import pytest
+
+from repro.core import online as ON
+from repro.core import sim
+from repro.core.pipeline import TaskPlan, run_pipeline
+from repro.data.pipeline import (CorrelatedTaskStream, make_calibration_set,
+                                 make_hop_calibration_sets)
+
+
+def _stream(n_depths, seed=0):
+    return CorrelatedTaskStream(n_labels=12, dim=32, correlation="medium",
+                                seed=seed, n_probe_depths=n_depths)
+
+
+def _sched(n_depths, seed=0, elems=10_000):
+    st = _stream(n_depths, seed)
+    sets = make_hop_calibration_sets(st, 300, n_depths=n_depths)
+    feats, labels = sets[0]
+    cache = ON.SemanticCache(st.n_labels, st.dim)
+    cache.warm_up(feats, labels)
+    th = ON.calibrate_thresholds(cache, feats, labels)
+    probes = ON.build_hop_probes(sets[1:], st.n_labels)
+    sched = ON.OnlineScheduler(cache, th, elems, T_e=2e-3, T_c=2e-3,
+                               hop_elems=[elems] * n_depths,
+                               stage_compute=[2e-3] * (n_depths + 1),
+                               hop_probes=probes)
+    return sched, st
+
+
+# -------------------------------------------------------------- data layer
+def test_hop_features_depth0_identical_to_classic_stream():
+    """The rng draw sequence must not depend on n_probe_depths: a seeded
+    stream yields bit-identical depth-0 features (and labels) whether or
+    not it also emits deeper boundaries."""
+    a = _stream(1, seed=7)
+    b = _stream(3, seed=7)
+    for _ in range(50):
+        ta, tb = a.next_task(), b.next_task()
+        assert ta.label == tb.label
+        np.testing.assert_array_equal(ta.features, tb.features)
+        np.testing.assert_array_equal(tb.hop_features[0], tb.features)
+        assert tb.hop_features.shape == (3, b.dim)
+
+
+def test_hop_calibration_depth0_matches_classic_set():
+    st = _stream(2, seed=3)
+    sets = make_hop_calibration_sets(st, 200, n_depths=2, seed=1)
+    feats, labels = make_calibration_set(st, 200, seed=1)
+    np.testing.assert_array_equal(sets[0][0], feats)
+    np.testing.assert_array_equal(sets[0][1], labels)
+    np.testing.assert_array_equal(sets[1][1], labels)
+
+
+def test_deeper_calibration_features_more_separable():
+    """Depth attenuation concentrates class evidence: mean separability
+    against per-depth centers rises monotonically with depth."""
+    st = _stream(3, seed=5)
+    sets = make_hop_calibration_sets(st, 300, n_depths=3)
+    probes = ON.build_hop_probes(sets, st.n_labels)
+    mean_sep = []
+    for (feats, labels), probe in zip(sets, probes):
+        seps = [ON.separability(probe.cache.similarities(f)) for f in feats]
+        mean_sep.append(float(np.mean(seps)))
+    assert mean_sep[0] < mean_sep[1] < mean_sep[2], mean_sep
+
+
+# ------------------------------------------------------------ probe cascade
+def test_cascade_first_exit_wins_and_carries_uplink_bits():
+    sched, st = _sched(3, seed=2)
+    n = {0: 0, 1: 0, 2: 0, None: 0}
+    for task in st.tasks(300):
+        dec = sched.step_cascade(task.hop_features, bandwidth_bps=40e6)
+        n[dec.exit_hop] += 1
+        if dec.exit_hop == 0:
+            assert dec.early_exit and dec.bits is None
+        elif dec.exit_hop is not None:
+            # transmitted over the uplink, then exited at a deeper tier
+            assert not dec.early_exit
+            assert dec.bits is not None and dec.result is not None
+        else:
+            assert dec.result is None
+    assert n[1] + n[2] > 0, n    # mid-pipeline exits actually happen
+    assert n[None] + n[0] > 0, n
+
+
+def test_cascade_without_probes_equals_classic_step():
+    sched, st = _sched(2, seed=9)
+    classic = ON.OnlineScheduler(sched.cache, sched.th, sched.elems,
+                                 T_e=2e-3, T_c=2e-3,
+                                 update_centers=False)
+    sched.update_centers = False
+    for task in st.tasks(50):
+        a = sched.step_cascade([task.hop_features[0]], bandwidth_bps=40e6)
+        b = classic.step(task.hop_features[0], bandwidth_bps=40e6)
+        # probes beyond hop 0 see the shallow feature only when the
+        # cascade runs; with update_centers off the hop-0 outcome is
+        # shared state-free, so exit/bits agree whenever hop 0 decides
+        if a.exit_hop in (0, None):
+            assert (a.early_exit, a.bits) == (b.early_exit, b.bits)
+
+
+def test_probe_hop_requires_calibrated_probe():
+    sched, _ = _sched(2)
+    with pytest.raises(AssertionError):
+        sched.probe_hop(2, np.zeros(32))  # only segment 1 is calibrated
+
+
+def test_report_label_hops_upto_updates_crossed_tiers_only():
+    sched, st = _sched(3, seed=4)
+    c0 = sched.cache.counts.copy()
+    c1 = sched.hop_probes[0].cache.counts.copy()
+    c2 = sched.hop_probes[1].cache.counts.copy()
+    f = st.next_task().hop_features
+    sched.report_label_hops(f, 3, upto=2)   # exited at segment 2
+    assert sched.cache.counts[3] == c0[3] + 1
+    assert sched.hop_probes[0].cache.counts[3] == c1[3] + 1
+    assert sched.hop_probes[1].cache.counts[3] == c2[3]  # exiting tier: no
+    sched.report_label_hops(f, 3)           # full pipeline: all tiers
+    assert sched.hop_probes[1].cache.counts[3] == c2[3] + 1
+    sched.report_label_hops(f, 3, upto=0)   # exited on the end device
+    assert sched.cache.counts[3] == c0[3] + 2  # (two reports above)
+
+
+# ------------------------------------------------------------ plan semantics
+def test_sim_plan_exit_hop_normalization():
+    p = sim.SimPlan(compute=(1.0, 1.0, 1.0), tx=(1.0, 1.0), early_exit=True)
+    assert p.exit_hop == 0 and p.early_exit and p.n_stages == 1
+    p = sim.SimPlan(compute=(1.0, 1.0, 1.0), tx=(1.0, 1.0), exit_hop=1)
+    assert p.early_exit and p.n_stages == 2
+    # exiting at the last segment is just a full run
+    p = sim.SimPlan(compute=(1.0, 1.0, 1.0), tx=(1.0, 1.0), exit_hop=2)
+    assert p.exit_hop is None and not p.early_exit and p.n_stages == 3
+    with pytest.raises(AssertionError):
+        sim.SimPlan(compute=(1.0, 1.0), tx=(1.0,), exit_hop=5)
+
+
+def test_occupancy_helpers():
+    assert sim.occupies_compute(None, 3) and sim.occupies_link(None, 3)
+    assert sim.occupies_compute(1, 0) and sim.occupies_compute(1, 1)
+    assert not sim.occupies_compute(1, 2)
+    assert sim.occupies_link(1, 0) and not sim.occupies_link(1, 1)
+
+
+def test_all_hop1_exit_stream_releases_downstream():
+    """A stream that exits entirely at segment 1 of a 3-hop deployment
+    still accounts all 7 resources, but only the first three carry busy
+    time."""
+    plans = [TaskPlan.multihop((1e-3, 2e-3, 1e-3, 1e-3),
+                               (0.5e-3, 0.5e-3, 0.5e-3), exit_hop=1)
+             for _ in range(10)]
+    pr = run_pipeline(plans, arrival_period=1e-3)
+    assert pr.n_hops == 3
+    assert pr.compute_busy[0] > 0 and pr.compute_busy[1] > 0
+    assert pr.link_busy_hops[0] > 0
+    assert pr.compute_busy[2] == pr.compute_busy[3] == 0.0
+    assert pr.link_busy_hops[1] == pr.link_busy_hops[2] == 0.0
+    assert pr.exit_hop_counts() == {1: 10}
+    assert pr.exit_ratio == 1.0
+    # done at segment 1: serialized on the slow edge tier
+    assert abs(pr.makespan - (1e-3 + 0.5e-3 + 10 * 2e-3 - 0e-3)) < 1e-9
+
+
+def test_stream_result_exit_hop_backfill():
+    """StreamResult built without exit_hop (legacy constructors) derives
+    it from the early_exit booleans."""
+    r = sim.StreamResult(arrivals=[0.0], done=[1.0], early_exit=[True],
+                        makespan=1.0, compute_busy=(1.0,), link_busy=())
+    assert r.exit_hop == [0]

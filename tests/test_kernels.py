@@ -59,7 +59,11 @@ def test_pack4_roundtrip_property(rows_p, cols_p, seed):
 
 
 @pytest.mark.parametrize("B,S,D,L", [(4, 64, 128, 10), (16, 1024, 128, 100),
-                                     (8, 512, 256, 37)])
+                                     (8, 512, 256, 37),
+                                     # non-divisible B / S: exercised via
+                                     # zero-padding (exact, see kernel doc)
+                                     (6, 100, 128, 10), (13, 700, 64, 7),
+                                     (1, 1, 32, 3)])
 def test_semantic_probe_matches_ref(B, S, D, L):
     x = jax.random.normal(jax.random.PRNGKey(0), (B, S, D))
     c = jax.random.normal(jax.random.PRNGKey(1), (L, D))

@@ -1,0 +1,46 @@
+"""Non-divisible block-size handling of the fused semantic-probe kernel.
+
+The batch / sequence axes are zero-padded up to block multiples and the
+pad rows sliced off; the GAP epilogue divides by the *true* sequence
+length, so padding must be bit-exact against both the unpadded kernel
+and the pure-jnp oracle.  (Lives outside test_kernels.py so it also runs
+where hypothesis — which test_kernels imports — is unavailable.)
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.semantic_cache import semantic_probe
+
+
+@pytest.mark.parametrize("B,S,D,L", [
+    (6, 100, 128, 10),    # B % 8 != 0, S % 512 != 0
+    (13, 700, 64, 7),     # both axes ragged, odd batch
+    (1, 1, 32, 3),        # degenerate single-row, single-step
+    (8, 512, 64, 5),      # exactly divisible control
+])
+def test_semantic_probe_padded_matches_ref(B, S, D, L):
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, S, D))
+    c = jax.random.normal(jax.random.PRNGKey(1), (L, D))
+    sep, best, sims = semantic_probe(x, c, interpret=True)
+    assert sep.shape == (B,) and best.shape == (B,) and sims.shape == (B, L)
+    sep_r, best_r, sims_r = ref.semantic_probe_ref(x, c)
+    np.testing.assert_array_equal(best, best_r)
+    np.testing.assert_allclose(sims, sims_r, atol=1e-5)
+    np.testing.assert_allclose(sep, sep_r, rtol=1e-4, atol=1e-5)
+
+
+def test_semantic_probe_padding_is_exact():
+    """Padding must not perturb the unpadded rows: a ragged batch equals
+    the same rows probed with block sizes that divide evenly."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (10, 96, 64))
+    c = jax.random.normal(jax.random.PRNGKey(3), (6, 64))
+    sep_a, best_a, sims_a = semantic_probe(x, c, block_b=8, block_s=512,
+                                           interpret=True)
+    sep_b, best_b, sims_b = semantic_probe(x, c, block_b=2, block_s=32,
+                                           interpret=True)
+    np.testing.assert_allclose(sep_a, sep_b, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(best_a, best_b)
+    np.testing.assert_allclose(sims_a, sims_b, rtol=1e-5, atol=1e-6)

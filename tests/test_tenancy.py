@@ -23,7 +23,8 @@ from repro.core.costs import DeviceProfile, LinkProfile
 from repro.core.pipeline import TaskPlan, bandwidth_step_trace, \
     result_from_stream
 from repro.core.schedule import StageTimes
-from repro.data.pipeline import CorrelatedTaskStream, make_calibration_set
+from repro.data.pipeline import (CorrelatedTaskStream, make_calibration_set,
+                                 make_hop_calibration_sets)
 from repro.serving.tenancy import (MultiTenantCoachEngine, TenantSpec,
                                    WeightedDeficitRoundRobin, make_policy,
                                    run_multitenant_async, service_time_cost,
@@ -51,7 +52,11 @@ def _rand_plans(seed, n, n_hops):
                for k in range(n_hops)]
         rxo = [rng.uniform(0, tx[k]) if rng.rand() < 0.5 else None
                for k in range(n_hops)]
-        plans.append(TaskPlan.multihop(comp, tx, txo, rxo))
+        exit_hop = None
+        if n_hops >= 2 and rng.rand() < 0.25:
+            exit_hop = int(rng.randint(1, n_hops))  # hop-level exit
+        plans.append(TaskPlan.multihop(comp, tx, txo, rxo,
+                                       exit_hop=exit_hop))
     return plans
 
 
@@ -228,13 +233,26 @@ def _mk_stream(seed):
     return stream, feats, labels, classify
 
 
-def _mk_mt_engine(n_hops, tenants, policy, seed=4):
+def _mk_mt_engine(n_hops, tenants, policy, seed=4, hop_exit=False):
     st, links = _stage_times(n_hops)
-    stream, feats, labels, classify = _mk_stream(seed)
+    if hop_exit:
+        stream = CorrelatedTaskStream(n_labels=30, dim=48,
+                                      correlation="medium", seed=seed,
+                                      n_probe_depths=n_hops)
+        sets = make_hop_calibration_sets(stream, 400, n_depths=n_hops)
+        feats, labels = sets[0]
+        hop_calib = sets[1:]
+
+        def classify(task):
+            d = np.linalg.norm(stream.mu - task.features[None], axis=1)
+            return task.hop_features, int(np.argmin(d))
+    else:
+        stream, feats, labels, classify = _mk_stream(seed)
+        hop_calib = None
     eng = MultiTenantCoachEngine(
         None, st, END, links[0], CLOUD, n_labels=30, calib_feats=feats,
         calib_labels=labels, tenants=tenants, policy=policy,
-        boundary_elems=50_000, links=links)
+        boundary_elems=50_000, links=links, hop_calib=hop_calib)
     return eng, stream, classify
 
 
@@ -266,6 +284,45 @@ def test_engine_timeline_pinned_to_multitenant_simulator(policy, n_hops):
         # and the tenant-sliced pipeline view agrees with re-slicing
         pr = tenant_pipeline_result(ref, t)
         _assert_timelines_agree(pr, mt.reports[t].stats.pipeline)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_mt_engine_hop_exit_pinned_to_simulator(policy):
+    """Acceptance: with per-hop probes calibrated per tenant, tasks exit
+    at hop 1 of the 3-hop chain and the multi-tenant engine's timeline
+    still equals the extended simulator replay at 1e-6 — per-resource
+    intervals (which now skip slots per-resource, not uniformly) and
+    per-tenant latencies included."""
+    tenants = [
+        TenantSpec("interactive", 50, arrival_period=4e-3, weight=4.0),
+        TenantSpec("burst", 50, arrivals=(0.0,) * 50, weight=1.0),
+    ]
+    eng, stream, classify = _mk_mt_engine(2, tenants, policy, seed=4,
+                                          hop_exit=True)
+    tasks = [stream.tasks(t.n_tasks) for t in tenants]
+    mt = eng.run_streams([list(ts) for ts in tasks], classify)
+    # the merged stream contains genuine mid-pipeline exits
+    hist = mt.pipeline.exit_hop_counts()
+    assert hist.get(1, 0) > 0, hist
+    ref = sim.simulate_multitenant_stream(
+        mt.plans, mt.arrivals,
+        make_policy(policy, weights=[t.weight for t in tenants]),
+        links=eng.links)
+    assert mt.order == ref.order
+    _assert_timelines_agree(result_from_stream(ref.stream), mt.pipeline)
+    merged = {}
+    for t in range(len(tenants)):
+        la = [rec.latency for rec in mt.reports[t].stats.pipeline.tasks]
+        lb = ref.tenant_latencies(t)
+        assert all(abs(a - b) < TOL for a, b in zip(la, lb))
+        pr = tenant_pipeline_result(ref, t)
+        _assert_timelines_agree(pr, mt.reports[t].stats.pipeline)
+        assert mt.reports[t].stats.exit_hops == pr.exit_hop_counts()
+        for k, v in mt.reports[t].stats.exit_hops.items():
+            merged[k] = merged.get(k, 0) + v
+    # per-tenant exit histograms are real (not vacuously empty) and sum
+    # to the merged chain's histogram
+    assert merged == hist and merged.get(1, 0) > 0
 
 
 @pytest.mark.parametrize("policy", ["fifo", "wdrr"])

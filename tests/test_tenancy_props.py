@@ -33,8 +33,12 @@ def tenant_mixes(draw):
             comp = tuple(
                 draw(st.floats(1e-4, 5e-3)) for _ in range(n_hops + 1))
             tx = tuple(draw(st.floats(0.0, 3e-3)) for _ in range(n_hops))
-            ps.append(sim.SimPlan(compute=comp, tx=tx,
-                                  early_exit=draw(st.booleans())))
+            # exit anywhere in the chain (post_init normalizes exit_hop
+            # == n_hops back to a full run, and early_exit to exit_hop=0)
+            ps.append(sim.SimPlan(
+                compute=comp, tx=tx, early_exit=draw(st.booleans()),
+                exit_hop=draw(st.one_of(st.none(),
+                                        st.integers(0, n_hops)))))
         plans.append(ps)
         arrivals.append(arr)
     weights = [draw(st.floats(0.1, 8.0)) for _ in range(n_tenants)]
