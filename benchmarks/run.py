@@ -13,7 +13,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-from benchmarks import (ablation, arch_partition, fig1_locality,
+from benchmarks import (ablation, arch_partition, batching, fig1_locality,
                         fig2_schemes, fig5_dynamic, fig6_fig7_bandwidth,
                         kernels_bench, multihop, multitenant, planner,
                         roofline, table1_latency, table2_context)
@@ -33,6 +33,7 @@ MODULES = {
     "multihop": multihop,        # 2-hop vs 3-hop paired sim/async rows
     "multitenant": multitenant,  # per-tenant fairness-vs-bubble rows
     "planner": planner,          # offline-search candidate throughput
+    "batching": batching,        # micro-batched vs unbatched paired rows
     "roofline": roofline,
 }
 

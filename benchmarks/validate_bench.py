@@ -31,6 +31,14 @@ wall time and candidates/sec for the same full-stride sweep, with
 the exact decision of the naive per-candidate simulation search) and a
 positive throughput ``speedup``.
 
+``kind = "batching"``: continuous micro-batching rows — every
+(model, hops, engine) is a paired ``batched`` on/off experiment on the
+same overloaded stream, with per-tier ``batch_caps``/``realized_batch``
+lists of ``hops`` entries (all ones on the off rows, caps > 1 with
+realized batch sizes > 1 somewhere on the on rows).  The perf gate:
+each batched row must deliver >= 1.5x its unbatched partner's
+throughput at equal-or-better p99 latency.
+
 Rows of the engine-bearing kinds missing an explicit ``engine`` are
 rejected outright (planner rows describe the search, not an executor,
 and carry no engine).
@@ -55,6 +63,14 @@ PLANNER_NUMERIC = (
     "candidates_naive", "candidates_fast", "naive_s", "fast_s",
     "cand_per_s_naive", "cand_per_s_fast", "speedup", "objective_ms",
 )
+BATCHING_NUMERIC = (
+    "single_task_ms", "mean_latency_ms", "p99_latency_ms",
+    "throughput_its", "makespan_ms", "max_stage_ms", "batch_slack_ms",
+)
+#: batched throughput must beat the unbatched partner by this factor...
+BATCH_SPEEDUP_MIN = 1.5
+#: ...without giving up tail latency (equal-or-better p99)
+BATCH_P99_TOL = 1 + 1e-9
 ENGINES = {"sim", "async"}
 POLICIES = {"fifo", "rr", "wdrr"}
 
@@ -122,21 +138,72 @@ def _check_multihop_exit(i: int, row: dict) -> None:
             f"row {i}: hop_exit-off row reports exits"
 
 
+def _check_batching(i: int, row: dict) -> None:
+    assert isinstance(row.get("batched"), bool), \
+        f"row {i}: batching rows need a boolean batched tag"
+    _check_numeric(i, row, BATCHING_NUMERIC)
+    caps = row.get("batch_caps")
+    realized = row.get("realized_batch")
+    n_seg = row["hops"]
+    for name, vals in (("batch_caps", caps), ("realized_batch", realized)):
+        assert isinstance(vals, list) and len(vals) == n_seg and all(
+            isinstance(v, (int, float)) and v >= 1 - 1e-9 for v in vals), \
+            f"row {i}: {name} must list {n_seg} per-tier values >= 1"
+    assert isinstance(row.get("batch_cap"), int) \
+        and row["batch_cap"] == max(caps), f"row {i}: bad batch_cap"
+    if row["batched"]:
+        assert max(caps) > 1, f"row {i}: batched row with all-ones caps"
+        assert max(realized) > 1, \
+            f"row {i}: batched row never formed a batch"
+    else:
+        assert all(c == 1 for c in caps), \
+            f"row {i}: unbatched row with caps > 1"
+        assert all(abs(b - 1) <= 1e-9 for b in realized), \
+            f"row {i}: unbatched row reports realized batches"
+
+
+def _check_batching_pairs(rows: dict) -> None:
+    """The perf gate: >= 1.5x throughput at equal-or-better p99, for
+    every (model, hops, engine) batched/unbatched pair."""
+    for key, variants in sorted(rows.items()):
+        assert set(variants) == {False, True}, \
+            f"batching {key}: needs paired batched on/off rows " \
+            f"(got {sorted(variants)})"
+        off, on = variants[False], variants[True]
+        speedup = on["throughput_its"] / max(off["throughput_its"], 1e-12)
+        assert speedup >= BATCH_SPEEDUP_MIN, \
+            f"batching {key}: throughput speedup {speedup:.2f}x " \
+            f"< {BATCH_SPEEDUP_MIN}x"
+        assert on["p99_latency_ms"] <= \
+            off["p99_latency_ms"] * BATCH_P99_TOL, \
+            f"batching {key}: batched p99 {on['p99_latency_ms']:.2f}ms " \
+            f"worse than unbatched {off['p99_latency_ms']:.2f}ms"
+
+
 def validate(path: Path) -> list:
     data = json.loads(path.read_text())
     assert isinstance(data, list) and data, "payload must be a non-empty list"
-    mh_seen, mt_seen = set(), set()
+    mh_seen, mt_seen, bt_seen = set(), set(), set()
     mh_exit = {}
     mt_runs = {}
+    bt_pairs = {}
     for i, row in enumerate(data):
         assert isinstance(row, dict), f"row {i}: not an object"
         kind = row.get("kind", "multihop")
-        assert kind in ("multihop", "multitenant", "planner"), \
+        assert kind in ("multihop", "multitenant", "planner", "batching"), \
             f"row {i}: kind {kind!r}"
         if kind == "planner":
             _check_planner(i, row)
             continue
         _check_common(i, row)
+        if kind == "batching":
+            _check_batching(i, row)
+            key = (row["model"], row["hops"], row["engine"])
+            assert row["batched"] not in bt_pairs.setdefault(key, {}), \
+                f"row {i}: duplicate batching row for {key}"
+            bt_pairs[key][row["batched"]] = row
+            bt_seen.add(key)
+            continue
         if kind == "multihop":
             _check_numeric(i, row, MULTIHOP_NUMERIC)
             # untagged rows predate the hop_exit pairing (see docstring)
@@ -172,6 +239,9 @@ def validate(path: Path) -> list:
         for key, tenants in sorted(mt_runs.items()):
             assert len(tenants) >= 2, \
                 f"multitenant {key}: fewer than 2 tenants ({tenants})"
+    if bt_seen:
+        _require_both_engines(bt_seen, "batching")
+        _check_batching_pairs(bt_pairs)
     return data
 
 

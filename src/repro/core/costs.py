@@ -160,6 +160,30 @@ class ModelGraph:
                    for i in end_set)
 
 
+def segment_batch_split(device: DeviceProfile,
+                        nodes: Sequence[LayerNode]
+                        ) -> Tuple[float, float]:
+    """Per-segment ``(t_fixed, t_marginal)`` for continuous micro-batching.
+
+    A layer's profiled service time ``layer_time(flops, util)`` exceeds
+    its compute-bound floor ``layer_time(flops, 1.0)`` by the attainment
+    gap — for memory-bound layers (``util << 1``) that gap is weight /
+    activation streaming and kernel-launch overhead, which a batched
+    launch pays once, not per sample.  So the batchable decomposition of
+    a segment is ``fixed = sum(gap)``, ``marginal = sum(compute floor)``;
+    by construction ``fixed + marginal`` equals the segment's unbatched
+    service time exactly, which is what keeps singleton batches
+    bit-identical to the unbatched pipeline (``sim.batched_service_time``).
+    """
+    fixed = 0.0
+    marginal = 0.0
+    for n in nodes:
+        floor = device.layer_time(n.flops, 1.0)
+        fixed += device.layer_time(n.flops, n.util) - floor
+        marginal += floor
+    return fixed, marginal
+
+
 def chain_graph(name: str, flops: Sequence[float], out_elems: Sequence[int],
                 sensitivities: Optional[Sequence[float]] = None) -> ModelGraph:
     sens = sensitivities or [0.02] * len(flops)

@@ -40,7 +40,12 @@ class TaskPlan:
 
     ``exit_hop = e`` marks a hop-level semantic early exit at segment
     ``e`` (the task runs compute ``0..e`` and links ``0..e-1`` only);
-    ``early_exit`` is the legacy boolean spelling of ``exit_hop = 0``."""
+    ``early_exit`` is the legacy boolean spelling of ``exit_hop = 0``.
+
+    ``t_fixed`` (one per segment the plan declares) is the per-launch
+    fixed part of each segment's service time for continuous
+    micro-batching, and ``deadline`` the task's absolute staleness
+    deadline — both forwarded to ``sim.SimPlan`` (see its docstring)."""
     t_end: float
     t_tx: float
     t_cloud: float
@@ -53,13 +58,18 @@ class TaskPlan:
     tx_offsets: Tuple[Optional[float], ...] = ()
     rx_offsets: Tuple[Optional[float], ...] = ()
     exit_hop: Optional[int] = None
+    # ---- continuous micro-batching (empty / None = unbatched semantics)
+    t_fixed: Tuple[float, ...] = ()
+    deadline: Optional[float] = None
 
     @classmethod
     def multihop(cls, compute: Sequence[float], tx: Sequence[float],
                  tx_offsets: Optional[Sequence[Optional[float]]] = None,
                  rx_offsets: Optional[Sequence[Optional[float]]] = None,
                  early_exit: bool = False,
-                 exit_hop: Optional[int] = None) -> "TaskPlan":
+                 exit_hop: Optional[int] = None,
+                 t_fixed: Optional[Sequence[float]] = None,
+                 deadline: Optional[float] = None) -> "TaskPlan":
         compute, tx = tuple(compute), tuple(tx)
         assert len(compute) == len(tx) + 1
         return cls(t_end=compute[0], t_tx=tx[0] if tx else 0.0,
@@ -67,7 +77,9 @@ class TaskPlan:
                    compute=compute, tx=tx,
                    tx_offsets=tuple(tx_offsets) if tx_offsets else (None,) * len(tx),
                    rx_offsets=tuple(rx_offsets) if rx_offsets else (None,) * len(tx),
-                   exit_hop=exit_hop)
+                   exit_hop=exit_hop,
+                   t_fixed=tuple(t_fixed) if t_fixed else (),
+                   deadline=deadline)
 
     @property
     def n_hops(self) -> int:
@@ -83,15 +95,22 @@ class TaskPlan:
         else:
             comp, tx = [self.t_end, self.t_cloud], [self.t_tx]
             txo, rxo = [self.tx_offset], [self.cloud_offset]
+        fixed = list(self.t_fixed[:len(comp)]) if self.t_fixed else []
+        if fixed:
+            fixed += [0.0] * (len(comp) - len(fixed))
         while len(tx) < n_hops:
             tx.append(0.0)
             comp.append(0.0)
             txo.append(None)
             rxo.append(None)
+            if fixed:
+                fixed.append(0.0)
         return sim.SimPlan(compute=tuple(comp), tx=tuple(tx),
                            tx_offset=tuple(txo), rx_offset=tuple(rxo),
                            early_exit=self.early_exit,
-                           exit_hop=self.exit_hop)
+                           exit_hop=self.exit_hop,
+                           t_fixed=tuple(fixed),
+                           deadline=self.deadline)
 
 
 @dataclasses.dataclass
@@ -209,11 +228,14 @@ def run_pipeline(plans: Sequence[TaskPlan],
                  arrivals: Optional[Sequence[float]] = None,
                  arrival_period: float = 0.0,
                  link: Optional[LinkProfile] = None,
-                 links: Optional[Sequence[Optional[LinkProfile]]] = None
+                 links: Optional[Sequence[Optional[LinkProfile]]] = None,
+                 batch_caps: Optional[Sequence[int]] = None
                  ) -> PipelineResult:
     """Execute the task stream.  ``link`` (classic) or ``links`` (one per
     hop) with a bandwidth trace re-integrates each task's transmission
-    time at its actual start time (dynamic networks, Fig. 5)."""
+    time at its actual start time (dynamic networks, Fig. 5).
+    ``batch_caps`` enables per-tier continuous micro-batching (see
+    ``sim.simulate_stream``)."""
     n = len(plans)
     if arrivals is None:
         arrivals = [i * arrival_period for i in range(n)]
@@ -224,7 +246,7 @@ def run_pipeline(plans: Sequence[TaskPlan],
     # every tier's (idle) resources
     n_hops = max(max(p.n_hops for p in plans), len(links))
     res = sim.simulate_stream([p.as_sim_plan(n_hops) for p in plans],
-                              arrivals, links=links)
+                              arrivals, links=links, batch_caps=batch_caps)
     return result_from_stream(res)
 
 

@@ -551,16 +551,25 @@ def stage_times_frontiers(tables: PlannerTables,
 # ====================================================== batched chain sweep
 @dataclasses.dataclass
 class SweepResult:
-    """Per-tuple relax-ladder representatives over the whole chain sweep."""
+    """Per-tuple relax-ladder representatives over the whole chain sweep.
+
+    With pruning on, a tuple whose boundary-event replay was provably
+    unnecessary carries its *lower bound* ``B_c + min max_stage`` as the
+    objective and its stage-sum feasibility upper bound — both
+    conservative for ranking (every pruned tuple is strictly dominated
+    by the exactly-scored incumbent), so the shortlist still provably
+    contains the naive argmin."""
     combos: List[Tuple[int, ...]]    # scored tuples, in naive (lex) order
     objective: np.ndarray            # [T] representative Eq. 6 objective
     feasible: np.ndarray             # [T] representative feasibility
     n_scored: int                    # candidate evaluations performed
+    n_pruned: int = 0                # non-serial replays skipped via bound
 
 
 def chain_sweep(tables: PlannerTables, positions: Sequence[int],
                 n_hops: int, min_end_nodes: int = 1,
-                T_max: float = float("inf")) -> SweepResult:
+                T_max: float = float("inf"),
+                prune: bool = False) -> SweepResult:
     """Score every ordered chain-cut tuple at every relax level.
 
     Vectorized numpy prefix-sum lookups produce each (tuple, level)'s
@@ -568,12 +577,25 @@ def chain_sweep(tables: PlannerTables, positions: Sequence[int],
     stage sum in one shot; serial tuples finish fully vectorized, the
     rest replay their O(edges) boundary events.  The per-tuple
     representative replicates ``partitioner._relax_bits``'s acceptance
-    rule exactly, so ranking matches the naive search."""
+    rule exactly, so ranking matches the naive search.
+
+    With ``prune=True`` the non-serial replays run in ascending
+    lower-bound order (``B_c + min-over-levels max_stage``, with
+    possibly-feasible tuples first) against an exactly-scored incumbent;
+    once every remaining tuple is provably dominated — it cannot be
+    feasible while the incumbent is, and its bound already exceeds the
+    incumbent's near-tie band — the tail is skipped wholesale.  Skipped
+    tuples keep their bound as representative, which by construction
+    sorts strictly after the incumbent, so ``_shortlist``'s best /
+    near-tie selection (and hence the rescored argmin) is unchanged.
+    Representative *values* for pruned tuples differ from the
+    ``prune=False`` sweep, which is why the exhaustive form stays the
+    default."""
     combos = [c for c in itertools.combinations_with_replacement(
         positions, n_hops)
         if tables.pref_cnt[c[0]] >= min_end_nodes]
     if not combos:
-        return SweepResult([], np.empty(0), np.empty(0, bool), 0)
+        return SweepResult([], np.empty(0), np.empty(0, bool), 0, 0)
     P = np.asarray(combos, dtype=np.int64)          # [T, n]
     T = len(combos)
     cnt = tables.pref_cnt[P]                        # [T, n]
@@ -615,7 +637,38 @@ def chain_sweep(tables: PlannerTables, positions: Sequence[int],
     # overlap windows; levels that provably cannot be accepted (Eq. 6
     # objective >= its bound B_c + max_stage, or the ceiling rule) skip
     # the replay without changing the representative
-    for ti in np.nonzero(~serial)[0]:
+    nonserial = list(np.nonzero(~serial)[0])
+    n_pruned = 0
+    inc_obj, inc_feas = np.inf, False
+    if prune and nonserial:
+        # B_t >= 0, so every level's objective >= B_c + max_stage and
+        # the ladder representative >= B_c + min over scored levels;
+        # stage-sum feasibility is replay-independent, so feas.any is a
+        # true upper bound on any level's exact (ceiling-rule) outcome
+        lb = B_c + np.where(has_bits, max_stage.min(axis=0), max_stage[0])
+        pfeas = feas.any(axis=0)
+        nonserial.sort(key=lambda ti: (not pfeas[ti], lb[ti]))
+        ser = np.nonzero(serial)[0]
+        if len(ser):
+            si = min(ser, key=lambda ti: (not rep_feas[ti], rep_obj[ti]))
+            inc_obj, inc_feas = float(rep_obj[si]), bool(rep_feas[si])
+    for pos, ti in enumerate(nonserial):
+        if prune:
+            can_f = bool(pfeas[ti])
+            bound = float(lb[ti])
+            # the (~pfeas, lb) order makes both conditions monotone: the
+            # first dominated tuple dominates the whole tail.  Dominated
+            # means it can never rank at or near the incumbent under the
+            # naive (infeasible, objective) order, whatever its replay
+            # would have said
+            if (inc_feas and not can_f) or (
+                    (inc_feas or not can_f)
+                    and bound > inc_obj * (1 + 1e-9) + 1e-300):
+                for tj in nonserial[pos:]:
+                    rep_obj[tj] = lb[tj]
+                    rep_feas[tj] = pfeas[tj]
+                n_pruned = len(nonserial) - pos
+                break
         combo = combos[ti]
         bc = B_c[ti]
 
@@ -644,8 +697,10 @@ def chain_sweep(tables: PlannerTables, positions: Sequence[int],
                 if o < r_obj and fe >= r_feas:
                     r_obj, r_feas, r_ms = o, fe, ms
         rep_obj[ti], rep_feas[ti], rep_ms[ti] = r_obj, r_feas, r_ms
+        if r_feas > inc_feas or (r_feas == inc_feas and r_obj < inc_obj):
+            inc_obj, inc_feas = float(r_obj), bool(r_feas)
     n_scored = int(np.where(has_bits, n_lvl, 1).sum())
-    return SweepResult(combos, rep_obj, rep_feas, n_scored)
+    return SweepResult(combos, rep_obj, rep_feas, n_scored, n_pruned)
 
 
 def _shortlist(objective: np.ndarray, feasible: np.ndarray,
@@ -668,8 +723,14 @@ def chain_shortlist(tables: PlannerTables, positions: Sequence[int],
                     n_hops: int, min_end_nodes: int, T_max: float,
                     top_k: int) -> Tuple[List[Tuple[int, ...]], int]:
     """Fast-score the whole chain sweep and return the tuples worth an
-    exact event-sim rescore, in naive sweep order."""
-    res = chain_sweep(tables, positions, n_hops, min_end_nodes, T_max)
+    exact event-sim rescore, in naive sweep order.  Runs the sweep with
+    lower-bound pruning: dominated non-serial replays are skipped.  The
+    shortlist's *tail* may then differ from the exhaustive sweep's (a
+    pruned tuple ranks by its bound), but the best candidate and its
+    near-tie band are always exactly scored, so the event-sim rescore
+    still returns the naive argmin (see ``chain_sweep``)."""
+    res = chain_sweep(tables, positions, n_hops, min_end_nodes, T_max,
+                      prune=True)
     if not res.combos:
         return [], 0
     pick = _shortlist(res.objective, res.feasible, top_k)

@@ -307,13 +307,27 @@ class SimPlan:
     downstream.  ``early_exit`` is the legacy boolean spelling of
     ``exit_hop = 0`` (task runs only segment 0) and is kept in sync:
     after normalization it is True iff the task exits before the last
-    segment."""
+    segment.
+
+    ``t_fixed[k]`` splits segment ``k``'s service time into a per-launch
+    fixed part and a per-task marginal part for continuous micro-batching
+    (calibrated from the per-layer utilization attainment gap in
+    ``repro.core.costs.segment_batch_split``): a batch of ``m >= 2``
+    tasks occupies the tier for ``max_i t_fixed_i + sum_i t_marginal_i``
+    where ``t_marginal = compute - t_fixed``.  A singleton batch costs
+    exactly ``compute[k]``, so ``batch_cap = 1`` timelines are
+    bit-identical to the unbatched replay by construction.  ``deadline``
+    is the task's absolute staleness deadline (tenant SLO): batch
+    formation never admits a follower that would push any member's
+    finish past the tightest deadline in the batch."""
     compute: Tuple[float, ...]
     tx: Tuple[float, ...]
     tx_offset: Tuple[Optional[float], ...] = ()
     rx_offset: Tuple[Optional[float], ...] = ()
     early_exit: bool = False
     exit_hop: Optional[int] = None
+    t_fixed: Tuple[float, ...] = ()
+    deadline: Optional[float] = None
 
     def __post_init__(self):
         n_hops = len(self.tx)
@@ -322,6 +336,12 @@ class SimPlan:
             self.tx_offset = (None,) * n_hops
         if not self.rx_offset:
             self.rx_offset = (None,) * n_hops
+        if not self.t_fixed:
+            self.t_fixed = (0.0,) * (n_hops + 1)
+        assert len(self.t_fixed) == n_hops + 1, "need n_hops+1 fixed costs"
+        assert all(0.0 <= f <= c + 1e-12
+                   for f, c in zip(self.t_fixed, self.compute)), \
+            "t_fixed must stay within each segment's compute time"
         if self.early_exit and self.exit_hop is None:
             self.exit_hop = 0
         if self.exit_hop is not None:
@@ -336,6 +356,59 @@ class SimPlan:
         """Number of compute segments the task actually runs."""
         return (self.exit_hop + 1) if self.exit_hop is not None \
             else len(self.compute)
+
+    @property
+    def t_marginal(self) -> Tuple[float, ...]:
+        """Per-segment marginal (per-batch-member) service time."""
+        return tuple(c - f for c, f in zip(self.compute, self.t_fixed))
+
+
+# -------------------------------------------------- micro-batching semantics
+def batched_service_time(plans: Sequence[SimPlan], k: int) -> float:
+    """Tier occupancy of one micro-batch at segment ``k``.
+
+    A singleton costs exactly its ``compute[k]`` (bit-identity with the
+    unbatched replay); ``m >= 2`` members amortize the launch cost:
+    ``max_i t_fixed_i[k] + sum_i (compute_i[k] - t_fixed_i[k])``.  Both
+    the arithmetic simulator and the event-driven executor price batches
+    through this one helper, so their float arithmetic is identical."""
+    if len(plans) == 1:
+        return plans[0].compute[k]
+    return (max(p.t_fixed[k] for p in plans)
+            + sum(p.compute[k] - p.t_fixed[k] for p in plans))
+
+
+def greedy_batch_size(k: int, cap: int, s: float,
+                      plans: Sequence[SimPlan],
+                      ready: Sequence[float]) -> int:
+    """Greedy drain-up-to-cap-or-deadline batch formation rule.
+
+    ``plans[0]`` is the head task the worker woke up for; ``plans[1:]``
+    are the tasks queued behind it in FIFO order, *snapshotted at the
+    worker's wake instant* (items enqueued later never join this batch —
+    the executor and the simulator must agree on the candidate set).
+    ``s`` is the batch's service start; ``ready[i]`` is when task ``i``'s
+    input data is ready at this tier.  Followers are admitted in FIFO
+    order while (a) the cap is not exceeded, (b) the follower's data is
+    ready by ``s``, and (c) the grown batch still finishes by the
+    tightest deadline among its members (the head itself is never
+    deadline-gated — it must run regardless).  The first failure stops
+    formation, so a batch is always a FIFO prefix: batching never
+    reorders tasks."""
+    inf = float("inf")
+    d0 = plans[0].deadline
+    dmin = d0 if d0 is not None else inf
+    n = 1
+    while n < len(plans) and n < cap:
+        p = plans[n]
+        if ready[n] > s:
+            break
+        nd = min(dmin, p.deadline if p.deadline is not None else inf)
+        if s + batched_service_time(plans[:n + 1], k) > nd:
+            break
+        dmin = nd
+        n += 1
+    return n
 
 
 @dataclasses.dataclass
@@ -352,7 +425,14 @@ class StreamResult:
     segment; ``exit_hop[i]`` names the segment it terminated at (``None``
     = full pipeline).  Downstream of the exit, the task occupies nothing
     — use ``occupies_compute``/``occupies_link`` to map a resource's
-    interval list back to the tasks that produced it."""
+    interval list back to the tasks that produced it.
+
+    Under micro-batching a compute interval may serve several tasks at
+    once: ``compute_batch_sizes[k][b]`` counts the occupying tasks served
+    by ``compute_intervals[k][b]`` (consecutive in admission order).
+    Empty means every interval is a singleton — the unbatched 1:1
+    task-to-interval mapping.  Link transfers are never batched, so link
+    intervals always stay 1:1."""
     arrivals: List[float]
     done: List[float]
     early_exit: List[bool]
@@ -362,6 +442,7 @@ class StreamResult:
     compute_intervals: Tuple[Tuple[Interval, ...], ...] = ()
     link_intervals: Tuple[Tuple[Interval, ...], ...] = ()
     exit_hop: List[Optional[int]] = dataclasses.field(default_factory=list)
+    compute_batch_sizes: Tuple[Tuple[int, ...], ...] = ()
 
     def __post_init__(self):
         if not self.exit_hop:
@@ -370,7 +451,8 @@ class StreamResult:
 
 def simulate_stream(plans: Sequence[SimPlan],
                     arrivals: Sequence[float],
-                    links: Optional[Sequence[Optional[LinkProfile]]] = None
+                    links: Optional[Sequence[Optional[LinkProfile]]] = None,
+                    batch_caps: Optional[Sequence[int]] = None
                     ) -> StreamResult:
     """Replay a task stream over the ``2n+1`` serial resources.
 
@@ -381,8 +463,17 @@ def simulate_stream(plans: Sequence[SimPlan],
 
     A task with ``exit_hop = e`` terminates at segment ``e``: it runs
     compute ``0..e`` and links ``0..e-1`` and releases every downstream
-    resource at the exit instant (hop-level semantic early exit)."""
+    resource at the exit instant (hop-level semantic early exit).
+
+    ``batch_caps[k]`` (one per compute segment) enables continuous
+    micro-batching on tier ``k``: a free worker drains the tasks queued
+    at its wake instant into one batch, bounded by the cap and by the
+    members' staleness deadlines (``greedy_batch_size``), and the tier
+    is occupied once for ``batched_service_time``.  ``None`` — or caps
+    of all ones — replays the classic one-task-per-slot timeline."""
     assert plans, "empty stream"
+    if batch_caps is not None and any(c > 1 for c in batch_caps):
+        return _simulate_stream_batched(plans, arrivals, links, batch_caps)
     n_hops = len(plans[0].tx)
     n_seg = n_hops + 1
     compute_free = [0.0] * n_seg
@@ -443,6 +534,148 @@ def simulate_stream(plans: Sequence[SimPlan],
                         compute_intervals=tuple(tuple(iv) for iv in compute_iv),
                         link_intervals=tuple(tuple(iv) for iv in link_iv),
                         exit_hop=exit_hops)
+
+
+def _simulate_stream_batched(
+        plans: Sequence[SimPlan],
+        arrivals: Sequence[float],
+        links: Optional[Sequence[Optional[LinkProfile]]],
+        batch_caps: Sequence[int]) -> StreamResult:
+    """Staged replay of ``simulate_stream`` with per-tier micro-batching.
+
+    Tiers are replayed one at a time (tier 0, link 0, tier 1, ...) —
+    legal because tasks flow strictly forward, so a tier's inputs are
+    fully determined by the previous link's outputs.  Each compute tier
+    drains its pending tasks with the same greedy
+    drain-up-to-cap-or-deadline rule the event-driven workers in
+    ``repro.serving.async_engine`` apply: batch membership is decided
+    against the queue state at the worker's *wake* instant, service is
+    priced by ``batched_service_time``, and exit-hop members leave the
+    batch at their tier.  Members of a multi-task batch forward serially
+    (the batch launch owns the tier until it completes, so the Fig. 4
+    intra-task overlap offsets only apply to singleton batches).  With
+    every cap at 1 the replay uses the same float expressions as the
+    classic interleaved loop."""
+    n_hops = len(plans[0].tx)
+    n_seg = n_hops + 1
+    caps = [int(batch_caps[k]) if k < len(batch_caps) else 1
+            for k in range(n_seg)]
+    assert all(c >= 1 for c in caps), "batch caps must be >= 1"
+    for p in plans:
+        assert len(p.tx) == n_hops, "mixed hop counts in one stream"
+    # tier-0 batches gather same-instant arrivals, so batching the ingress
+    # tier needs arrival order = admission order (deeper tiers see
+    # monotone hand-off instants by construction, any arrival order)
+    assert caps[0] <= 1 or all(
+        a0 <= a1 for a0, a1 in zip(arrivals, arrivals[1:])), \
+        "batching tier 0 needs non-decreasing arrivals (admission order)"
+    compute_busy = [0.0] * n_seg
+    link_busy = [0.0] * n_hops
+    compute_iv: List[List[Interval]] = [[] for _ in range(n_seg)]
+    comp_bs: List[List[int]] = [[] for _ in range(n_seg)]
+    link_iv: List[List[Interval]] = [[] for _ in range(n_hops)]
+    done: List[float] = [0.0] * len(plans)
+    link_free = [0.0] * n_hops
+
+    # pending task state entering the current tier, FIFO by admission:
+    # (task index, queue-enqueue instant, input-ready instant, data-done)
+    pend: List[Tuple[int, float, float, float]] = []
+    enq = 0.0
+    for i, arr in enumerate(arrivals):
+        enq = arr if arr > enq else enq   # the admitter is serial
+        pend.append((i, enq, float(arr), float(arr)))
+
+    for k in range(n_seg):
+        cap = caps[k]
+        free = 0.0
+        nxt: List[Tuple[int, float]] = []   # (task index, tx_ready) -> link k
+        i = 0
+        while i < len(pend):
+            idx0, enq0, ready0, dd0 = pend[i]
+            wake = max(enq0, free)
+            s = max(ready0, wake)
+            n_b = 1
+            if cap > 1:
+                # candidate set = FIFO queue snapshot at the wake instant
+                # (enqueue instants are non-decreasing, so it is a prefix)
+                j = i + 1
+                while j < len(pend) and pend[j][1] <= wake:
+                    j += 1
+                cand = pend[i:j]
+                n_b = greedy_batch_size(
+                    k, cap, s, [plans[e[0]] for e in cand],
+                    [e[2] for e in cand])
+            batch = pend[i:i + n_b]
+            i += n_b
+            if n_b == 1:
+                p = plans[idx0]
+                comp = p.compute[k]
+                compute_busy[k] += comp
+                compute_iv[k].append((s, s + comp))
+                comp_bs[k].append(1)
+                fin = max(s + comp, dd0)
+                free = fin
+                if k == n_hops or (p.exit_hop is not None
+                                   and k >= p.exit_hop):
+                    done[idx0] = fin
+                else:
+                    off = p.tx_offset[k]
+                    tx_ready = fin if off is None or off >= comp else s + off
+                    nxt.append((idx0, tx_ready))
+                continue
+            dur = batched_service_time([plans[e[0]] for e in batch], k)
+            compute_busy[k] += dur
+            compute_iv[k].append((s, s + dur))
+            comp_bs[k].append(n_b)
+            end = s + dur
+            fin = end
+            for (idx_m, _, _, dd_m) in batch:
+                p = plans[idx_m]
+                fin = max(end, dd_m)   # data-done gates each completion
+                if k == n_hops or (p.exit_hop is not None
+                                   and k >= p.exit_hop):
+                    done[idx_m] = fin
+                else:
+                    nxt.append((idx_m, fin))
+            free = fin
+
+        if k == n_hops:
+            break
+        new_pend: List[Tuple[int, float, float, float]] = []
+        for (idx, tx_ready) in nxt:
+            p = plans[idx]
+            t_start = max(tx_ready, link_free[k])
+            t_dur = p.tx[k]
+            lk = links[k] if links is not None and k < len(links) else None
+            if lk is not None and lk.trace is not None and t_dur > 0:
+                bits = t_dur * lk.bandwidth_bps
+                t_dur = lk.transfer_time(bits, t_start)
+            t_done = t_start + t_dur
+            link_free[k] = t_done
+            link_busy[k] += t_dur
+            link_iv[k].append((t_start, t_done))
+            roff = p.rx_offset[k]
+            c_ready = t_done if roff is None \
+                else max(t_start + roff, tx_ready)
+            # the task reaches the next tier's queue the moment enough of
+            # the tensor is across — the same instant (same float
+            # expression) the executor's link worker performs its put
+            fwd = min(max(c_ready - t_start, 0.0), t_dur)
+            new_pend.append((idx, t_start + fwd, c_ready, t_done))
+        pend = new_pend
+
+    arr_list = list(arrivals)
+    makespan = max(done) - min(arr_list)
+    return StreamResult(arrivals=arr_list, done=done,
+                        early_exit=[p.exit_hop is not None for p in plans],
+                        makespan=makespan,
+                        compute_busy=tuple(compute_busy),
+                        link_busy=tuple(link_busy),
+                        compute_intervals=tuple(tuple(iv) for iv in compute_iv),
+                        link_intervals=tuple(tuple(iv) for iv in link_iv),
+                        exit_hop=[p.exit_hop for p in plans],
+                        compute_batch_sizes=tuple(tuple(b)
+                                                  for b in comp_bs))
 
 
 # ============================================================ multi-tenant
@@ -543,17 +776,28 @@ def simulate_multitenant_stream(
         plans: Sequence[Sequence[SimPlan]],
         arrivals: Sequence[Sequence[float]],
         policy,
-        links: Optional[Sequence[Optional[LinkProfile]]] = None
+        links: Optional[Sequence[Optional[LinkProfile]]] = None,
+        batch_caps: Optional[Sequence[int]] = None
         ) -> MultiTenantStreamResult:
     """Replay tagged multi-tenant task streams over the shared ``2n+1``
     resources: compute the policy's admission order (gated by the
     ingress resource), then replay the merged stream with
     ``simulate_stream``.  This is the reference timeline the async
-    multi-tenant executor is pinned to."""
+    multi-tenant executor is pinned to.
+
+    ``batch_caps`` enables per-tier micro-batching on the merged stream.
+    The ingress tier's cap is forced to 1: multi-tenant admission is
+    credit-gated one task at a time (the dispatcher holds the next task
+    until ``compute_0`` frees), so the ingress queue never holds more
+    than one task and batching there would diverge from the admission
+    gate both engines implement."""
     order = multitenant_admission_order(plans, arrivals, policy)
     assert order, "empty multi-tenant stream"
     merged_plans = [plans[t][i] for (t, i) in order]
     merged_arr = [arrivals[t][i] for (t, i) in order]
-    res = simulate_stream(merged_plans, merged_arr, links=links)
+    if batch_caps is not None:
+        batch_caps = [1] + [int(c) for c in batch_caps[1:]]
+    res = simulate_stream(merged_plans, merged_arr, links=links,
+                          batch_caps=batch_caps)
     return MultiTenantStreamResult(stream=res, order=tuple(order),
                                    n_tenants=len(plans))

@@ -91,7 +91,8 @@ class VirtualClock:
 
     def __init__(self):
         self.now = 0.0
-        self._timers: List[Tuple[float, int, asyncio.Future]] = []
+        # (when, seq, future, is_settle_sentinel); ordered by (when, seq)
+        self._timers: List[Tuple[float, int, asyncio.Future, bool]] = []
         self._seq = itertools.count()
         self._blocked = 0   # workers suspended in a clock primitive
         self._live = 0      # workers spawned and not yet finished
@@ -121,7 +122,7 @@ class VirtualClock:
         if when <= self.now:
             return
         fut = asyncio.get_event_loop().create_future()
-        heapq.heappush(self._timers, (when, next(self._seq), fut))
+        heapq.heappush(self._timers, (when, next(self._seq), fut, False))
         await self._wait(fut)
 
     async def settle(self):
@@ -131,10 +132,18 @@ class VirtualClock:
         heap; a sentinel timer pushed at ``now`` sorts after them (same
         ``when``, later seq), so awaiting it yields until the instant
         has fully played out.  Admission dispatchers use this before
-        sampling queue state (``repro.serving.tenancy``)."""
-        while self._timers and self._timers[0][0] <= self.now:
+        sampling queue state (``repro.serving.tenancy``), batching
+        compute workers before snapshotting their hop queue.
+
+        Only *real* timers count: another worker's settle sentinel is
+        not pending work, and honouring it would livelock two settles
+        at the same instant (each re-arming against the other's
+        sentinel forever)."""
+        while any(when <= self.now and not sentinel
+                  for (when, _, _, sentinel) in self._timers):
             fut = asyncio.get_event_loop().create_future()
-            heapq.heappush(self._timers, (self.now, next(self._seq), fut))
+            heapq.heappush(self._timers,
+                           (self.now, next(self._seq), fut, True))
             await self._wait(fut)
 
     def spawn(self, coro) -> "asyncio.Task":
@@ -161,7 +170,7 @@ class VirtualClock:
                 raise RuntimeError(
                     "virtual-clock deadlock: all workers blocked with no "
                     "pending timer")
-            when, _, fut = heapq.heappop(self._timers)
+            when, _, fut, _sentinel = heapq.heappop(self._timers)
             self.now = max(self.now, when)
             self._wake(fut)
 
@@ -262,17 +271,52 @@ class HopQueue:
             return
         self._items.append(item)
 
+    def _admit_putter(self):
+        if self._putters:                       # a slot freed up
+            fut, pitem = self._putters.popleft()
+            self._items.append(pitem)
+            self._clock._wake(fut)
+
     async def get(self):
         if self._items:
             item = self._items.popleft()
-            if self._putters:                   # a slot freed up
-                fut, pitem = self._putters.popleft()
-                self._items.append(pitem)
-                self._clock._wake(fut)
+            self._admit_putter()
             return item
         fut = asyncio.get_event_loop().create_future()
         self._getters.append(fut)
         return await self._clock._wait(fut)
+
+    def get_nowait(self):
+        """Pop the head item without blocking; raises
+        ``asyncio.QueueEmpty`` when nothing is queued."""
+        if not self._items:
+            raise asyncio.QueueEmpty
+        item = self._items.popleft()
+        self._admit_putter()
+        return item
+
+    def drain(self, n: int) -> list:
+        """Pop up to ``n`` items (FIFO), admitting one blocked putter per
+        freed slot.  Never blocks; returns what was there.
+
+        A batching worker must decide *membership* from ``snapshot()``
+        taken at its wake instant, then ``drain`` exactly that many: the
+        naive pattern of sizing the drain from ``len(queue)`` at drain
+        time races with same-timeline producers — a worker that slept
+        between waking and draining would observe items enqueued *after*
+        its wake instant, diverging from the simulator's arithmetic rule
+        (which gathers the queue state at the wake instant only)."""
+        out = []
+        while len(out) < n and self._items:
+            out.append(self._items.popleft())
+            self._admit_putter()
+        return out
+
+    def snapshot(self) -> tuple:
+        """The queued items at this instant, in FIFO order, not removed.
+        Take this at the wake instant (after ``clock.settle()`` so every
+        same-instant put has landed) to fix a batch's candidate set."""
+        return tuple(self._items)
 
 
 # ================================================================= executor
@@ -300,7 +344,8 @@ class AsyncHopPipeline:
     def __init__(self, n_hops: int,
                  links: Optional[Sequence[Optional[LinkProfile]]] = None,
                  clock=None, queue_capacity: int = 0,
-                 segment_fn: Optional[Callable[[int, int, Any], Any]] = None):
+                 segment_fn: Optional[Callable[[int, int, Any], Any]] = None,
+                 batch_caps: Optional[Sequence[int]] = None):
         assert n_hops >= 1
         self.n_hops = n_hops
         self.n_seg = n_hops + 1
@@ -308,6 +353,13 @@ class AsyncHopPipeline:
         self.clock = clock if clock is not None else VirtualClock()
         self.capacity = queue_capacity
         self.segment_fn = segment_fn
+        # per-tier continuous micro-batching caps (None / 1 = unbatched);
+        # missing trailing tiers default to 1
+        self.batch_caps = [1] * self.n_seg
+        if batch_caps is not None:
+            for k, c in enumerate(batch_caps[:self.n_seg]):
+                assert int(c) >= 1, "batch caps must be >= 1"
+                self.batch_caps[k] = int(c)
         self.outputs: dict = {}
 
     def run(self, plan_fn: Callable[[int, float], Any], n_tasks: int,
@@ -341,6 +393,7 @@ class AsyncHopPipeline:
         comp_busy = [0.0] * n_seg
         link_busy = [0.0] * n_hops
         comp_iv: List[List[sim.Interval]] = [[] for _ in range(n_seg)]
+        comp_bs: List[List[int]] = [[] for _ in range(n_seg)]
         link_iv: List[List[sim.Interval]] = [[] for _ in range(n_hops)]
         done = [0.0] * n_tasks
         exit_hops: List[Optional[int]] = [None] * n_tasks
@@ -367,6 +420,7 @@ class AsyncHopPipeline:
 
         async def compute_worker(k: int, qin: HopQueue,
                                  qout: Optional[HopQueue]):
+            cap = self.batch_caps[k]
             while True:
                 if k == 0 and credits is not None:
                     await credits.put(None)
@@ -375,6 +429,54 @@ class AsyncHopPipeline:
                     if qout is not None:
                         await qout.put(_STOP)
                     return
+                if cap > 1:
+                    # -------- continuous micro-batching (greedy drain) --
+                    # membership is fixed against the queue state at the
+                    # *wake* instant: settle() lets every same-instant
+                    # put land, then snapshot() freezes the candidate
+                    # set before we sleep toward the head's ready time
+                    # (draining by len() after that sleep would admit
+                    # later arrivals the simulator never sees)
+                    await clock.settle()
+                    cand = [msg]
+                    for m in qin.snapshot():
+                        if m is _STOP:
+                            break
+                        cand.append(m)
+                    await clock.sleep_until(msg.ready_at)
+                    s = clock.now             # = max(ready, wake)
+                    n_b = sim.greedy_batch_size(
+                        k, cap, s, [m.plan for m in cand],
+                        [m.ready_at for m in cand])
+                    if n_b > 1:
+                        batch = [msg] + qin.drain(n_b - 1)
+                        dur = sim.batched_service_time(
+                            [m.plan for m in batch], k)
+                        if self.segment_fn is not None:
+                            for m in batch:
+                                m.payload = self.segment_fn(
+                                    k, m.idx, m.payload)
+                        comp_busy[k] += dur
+                        comp_iv[k].append((s, s + dur))
+                        comp_bs[k].append(len(batch))
+                        await clock.sleep(dur)
+                        # scatter completions in FIFO order; each member
+                        # still gates on its own upstream data-done, and
+                        # exit-hop members leave the batch at this tier
+                        for m in batch:
+                            await clock.sleep_until(m.data_done)
+                            p = m.plan
+                            if k == n_hops or (p.exit_hop is not None
+                                               and k >= p.exit_hop):
+                                done[m.idx] = clock.now
+                                exit_hops[m.idx] = p.exit_hop
+                                self.outputs[m.idx] = m.payload
+                            else:
+                                await qout.put(_Msg(
+                                    m.idx, p, ready_at=clock.now,
+                                    data_done=clock.now,
+                                    payload=m.payload))
+                        continue
                 await clock.sleep_until(msg.ready_at)
                 start = clock.now                 # = max(ready, worker free)
                 p = msg.plan
@@ -383,6 +485,7 @@ class AsyncHopPipeline:
                     msg.payload = self.segment_fn(k, msg.idx, msg.payload)
                 comp_busy[k] += comp
                 comp_iv[k].append((start, start + comp))
+                comp_bs[k].append(1)
                 data_done = msg.data_done
                 # a hop-level semantic exit at segment ``exit_hop``
                 # terminates the task on this worker: nothing is ever
@@ -455,6 +558,10 @@ class AsyncHopPipeline:
             await asyncio.gather(*workers)
 
         self.clock.run(main())
+        # batch sizes are only meaningful when batching is on; emit ()
+        # otherwise so unbatched runs stay field-identical to the
+        # legacy simulator output
+        batching = any(c > 1 for c in self.batch_caps)
         return sim.StreamResult(
             arrivals=arrs, done=done,
             early_exit=[eh is not None for eh in exit_hops],
@@ -462,7 +569,9 @@ class AsyncHopPipeline:
             compute_busy=tuple(comp_busy), link_busy=tuple(link_busy),
             compute_intervals=tuple(tuple(iv) for iv in comp_iv),
             link_intervals=tuple(tuple(iv) for iv in link_iv),
-            exit_hop=exit_hops)
+            exit_hop=exit_hops,
+            compute_batch_sizes=tuple(tuple(b) for b in comp_bs)
+            if batching else ())
 
 
 def run_pipeline_async(plans: Sequence[TaskPlan],
@@ -473,13 +582,15 @@ def run_pipeline_async(plans: Sequence[TaskPlan],
                        queue_capacity: int = 0,
                        clock=None,
                        segment_fn=None,
-                       payloads: Optional[Sequence[Any]] = None
+                       payloads: Optional[Sequence[Any]] = None,
+                       batch_caps: Optional[Sequence[int]] = None
                        ) -> PipelineResult:
     """Async-executor counterpart of ``core.pipeline.run_pipeline``: same
     plan normalization and result type, but the stream is *executed* by
     per-resource workers instead of replayed by ``simulate_stream``.
     With ``queue_capacity = 0`` (unbounded) and a ``VirtualClock`` the
-    two timelines agree to float precision."""
+    two timelines agree to float precision (including per-tier
+    micro-batching via ``batch_caps``)."""
     n = len(plans)
     if arrivals is None:
         arrivals = [i * arrival_period for i in range(n)]
@@ -489,7 +600,8 @@ def run_pipeline_async(plans: Sequence[TaskPlan],
     sps = [p.as_sim_plan(n_hops) for p in plans]
     pipe = AsyncHopPipeline(n_hops, links=links, clock=clock,
                             queue_capacity=queue_capacity,
-                            segment_fn=segment_fn)
+                            segment_fn=segment_fn,
+                            batch_caps=batch_caps)
     res = pipe.run(lambda i, _arr: sps[i], n, arrivals, payloads=payloads)
     return result_from_stream(res)
 
@@ -519,7 +631,8 @@ class AsyncCoachEngine(EngineBase):
             return self.admit_plan(task, bw, t_arr, classify, acc)
 
         pipe = AsyncHopPipeline(n_hops, links=self.links, clock=clock,
-                                queue_capacity=self.cfg.queue_capacity)
+                                queue_capacity=self.cfg.queue_capacity,
+                                batch_caps=self.batch_caps)
         res = pipe.run(admit, n, [i * arrival_period for i in range(n)])
         pr = result_from_stream(res)
         return self._stats(pr, n, acc["exits"], acc["bits"], acc["wire"],

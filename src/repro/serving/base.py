@@ -33,6 +33,15 @@ class EngineConfig:
     # ---- async hop-queue engine knobs
     queue_capacity: int = 64   # bounded per-hop queue depth (0 = unbounded)
     per_hop_bits: bool = True  # per-hop adaptive precision from hop EMAs
+    # ---- continuous micro-batching (compute workers drain their hop
+    #      queue into dynamic batches; see serving.batching / core.sim)
+    batch_caps: Optional[Sequence[int]] = None  # per-tier caps (None = off)
+    batch_fixed: Optional[Sequence[float]] = None  # per-segment fixed secs
+    batch_fixed_frac: float = 0.0  # or: fixed = frac * segment time
+    batch_slack: Optional[float] = None  # staleness budget (s) past arrival;
+    #                                also the auto-finder's SLO slack
+    auto_batch: bool = False       # run the batch-size finder at build
+    batch_cap_limit: int = 32      # auto-finder search ceiling
 
 
 @dataclasses.dataclass
@@ -120,6 +129,34 @@ class EngineBase:
             update_centers=cfg.update_centers,
             hop_elems=hop_elems, stage_compute=stage_times.compute,
             hop_probes=hop_probes)
+        # ---- continuous micro-batching: calibrated per-segment fixed
+        # costs + per-tier caps (explicit, or from the auto finder)
+        stage_compute = list(stage_times.compute)
+        if cfg.batch_fixed is not None:
+            self.batch_fixed: Optional[List[float]] = \
+                [float(f) for f in cfg.batch_fixed]
+            assert len(self.batch_fixed) == len(stage_compute), \
+                "need one fixed cost per compute segment"
+        elif cfg.batch_fixed_frac > 0.0:
+            assert cfg.batch_fixed_frac <= 1.0
+            self.batch_fixed = [cfg.batch_fixed_frac * c
+                                for c in stage_compute]
+        else:
+            self.batch_fixed = None
+        self.batch_slack = cfg.batch_slack
+        self.batch_caps: Optional[List[int]] = \
+            [int(c) for c in cfg.batch_caps] \
+            if cfg.batch_caps is not None else None
+        if cfg.auto_batch and self.batch_caps is None:
+            assert self.batch_fixed is not None, \
+                "auto_batch needs a fixed-cost calibration " \
+                "(batch_fixed / batch_fixed_frac)"
+            assert self.batch_slack is not None, \
+                "auto_batch needs an SLO slack (batch_slack)"
+            from repro.serving.batching import auto_batch_caps
+            self.batch_caps = auto_batch_caps(
+                stage_compute, self.batch_fixed, self.batch_slack,
+                cfg.batch_cap_limit)
 
     # ------------------------------------------------------------ decisions
     @staticmethod
@@ -159,8 +196,10 @@ class EngineBase:
         stage durations plus the exit marker: the executors run compute
         ``0..k`` / links ``0..k-1`` and release everything downstream."""
         st = self.st
+        bf = self.batch_fixed
         if dec.early_exit:
-            return TaskPlan(st.T_e, 0.0, 0.0, True), 0.0
+            return TaskPlan(st.T_e, 0.0, 0.0, True,
+                            t_fixed=(bf[0],) if bf else ()), 0.0
         bits = dec.bits or self.cfg.default_bits
         wire_bits = self.sched.elems * bits
         t_tx = wire_bits / bw
@@ -168,7 +207,8 @@ class EngineBase:
             return TaskPlan(
                 st.T_e, t_tx, st.T_c,
                 tx_offset=min(st.first_tx_offset, st.T_e),
-                cloud_offset=st.cloud_start_offset), wire_bits
+                cloud_offset=st.cloud_start_offset,
+                t_fixed=(bf[0], bf[-1]) if bf else ()), wire_bits
         if hop_bits is None:
             tx: Tuple[float, ...] = (t_tx,) + tuple(st.link[1:])
         else:
@@ -183,7 +223,8 @@ class EngineBase:
             compute=st.compute, tx=tx,
             tx_offsets=tuple(min(st.tx_offsets[k], st.compute[k])
                              for k in range(st.n_hops)),
-            rx_offsets=st.rx_offsets, exit_hop=dec.exit_hop), wire_bits
+            rx_offsets=st.rx_offsets, exit_hop=dec.exit_hop,
+            t_fixed=bf if bf else None), wire_bits
 
     def account(self, dec: ON.OnlineDecision, feats, pred, task,
                 wire_bits: float, acc: dict) -> None:
@@ -232,6 +273,10 @@ class EngineBase:
                 dec.required_bits or self.cfg.default_bits)
             hop_bits = (dec.bits or self.cfg.default_bits,) + chosen[1:]
         plan, wire_bits = self.plan_for(dec, bw, hop_bits=hop_bits)
+        if self.batch_slack is not None:
+            # staleness deadline from the stream's SLO slack: batch
+            # formation never holds this task past it (sim.SimPlan)
+            plan.deadline = t_bw + self.batch_slack
         self.account(dec, feats, pred, task, wire_bits, acc)
         return plan
 

@@ -47,13 +47,17 @@ class CoachEngine(EngineBase):
         via ``EngineBase.account``)."""
         plans = []
         acc = {"exits": 0, "wire": 0.0, "bits": [], "correct": []}
-        for task in tasks:
+        for i, task in enumerate(tasks):
             bw = self.link.bps_at(arrival_period * task.id)
             dec, feats, pred = self.decide(task, bw, classify)
             plan, wire_bits = self.plan_for(dec, bw)
+            if self.batch_slack is not None:
+                # same staleness deadline the async engines attach in
+                # admit_plan (arrival = i * period in every engine)
+                plan.deadline = i * arrival_period + self.batch_slack
             plans.append(plan)
             self.account(dec, feats, pred, task, wire_bits, acc)
         pr = run_pipeline(plans, arrival_period=arrival_period,
-                          links=self.links)
+                          links=self.links, batch_caps=self.batch_caps)
         return self._stats(pr, len(tasks), acc["exits"], acc["bits"],
                            acc["wire"], acc["correct"])

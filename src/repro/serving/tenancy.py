@@ -249,10 +249,19 @@ class MultiTenantHopPipeline:
     def __init__(self, n_hops: int, links=None, clock=None,
                  queue_capacity: int = 0, segment_fn=None,
                  policy: AdmissionPolicy | str = "fifo",
-                 weights: Optional[Sequence[float]] = None):
+                 weights: Optional[Sequence[float]] = None,
+                 batch_caps: Optional[Sequence[int]] = None):
+        # tier 0 never batches under multi-tenancy: admission is credit-
+        # gated one task at a time, so the ingress queue holds at most
+        # one task and a tier-0 drain would diverge from the admission
+        # gate (``sim.simulate_multitenant_stream`` applies the same
+        # clamp to stay pinned)
+        if batch_caps is not None:
+            batch_caps = [1] + [int(c) for c in batch_caps[1:]]
         self.pipe = AsyncHopPipeline(n_hops, links=links, clock=clock,
                                      queue_capacity=queue_capacity,
-                                     segment_fn=segment_fn)
+                                     segment_fn=segment_fn,
+                                     batch_caps=batch_caps)
         self.policy = make_policy(policy, weights=weights)
 
     @property
@@ -362,13 +371,15 @@ def run_multitenant_async(plans_by_tenant: Sequence[Sequence[TaskPlan]],
                           policy: AdmissionPolicy | str = "fifo",
                           weights: Optional[Sequence[float]] = None,
                           links=None, queue_capacity: int = 0, clock=None,
-                          segment_fn=None, payloads=None
+                          segment_fn=None, payloads=None,
+                          batch_caps: Optional[Sequence[int]] = None
                           ) -> sim.MultiTenantStreamResult:
     """Async-executor counterpart of ``sim.simulate_multitenant_stream``:
     same plan normalization, same result type, but the merged stream is
     *executed* by per-resource workers behind a policy dispatcher.  With
     unbounded queues and a ``VirtualClock`` the two admission orders and
-    timelines agree to float precision."""
+    timelines agree to float precision (including per-tier micro-batching
+    via ``batch_caps``; tier 0 is clamped to cap 1 on both sides)."""
     if links is None:
         links = [None]
     n_hops = max(max(p.n_hops for ps in plans_by_tenant for p in ps),
@@ -377,7 +388,7 @@ def run_multitenant_async(plans_by_tenant: Sequence[Sequence[TaskPlan]],
     pipe = MultiTenantHopPipeline(n_hops, links=links, clock=clock,
                                   queue_capacity=queue_capacity,
                                   segment_fn=segment_fn, policy=policy,
-                                  weights=weights)
+                                  weights=weights, batch_caps=batch_caps)
     plan_fns = [(lambda t: lambda i, _arr: sps[t][i])(t)
                 for t in range(len(sps))]
     return pipe.run(plan_fns, arrivals_by_tenant, payloads=payloads)
@@ -407,21 +418,31 @@ def tenant_pipeline_result(mt: sim.MultiTenantStreamResult,
         # a resource's interval list only contains the slots that occupy
         # it (a task exiting at segment e occupies compute 0..e and links
         # 0..e-1): map each tenant slot to its position in that per-
-        # resource ordering
-        def _slice(intervals, occupies):
-            pos = -1
+        # resource ordering.  Under micro-batching one compute interval
+        # serves a consecutive run of occupying slots
+        # (``compute_batch_sizes``); a shared batch interval is
+        # attributed to *every* tenant with a member in it, so
+        # per-tenant busy time counts a shared launch in full (links
+        # never batch and stay 1:1)
+        def _slice(intervals, occupies, sizes=None):
+            occ = [j for j in range(len(mt.order))
+                   if occupies(s.exit_hop[j])]
+            if not sizes:
+                sizes = [1] * len(intervals)
             out = []
-            for j in range(len(mt.order)):
-                if not occupies(s.exit_hop[j]):
-                    continue
-                pos += 1
-                if j in slotset:
-                    out.append(intervals[pos])
+            pos = 0
+            for iv, n_b in zip(intervals, sizes):
+                if any(j in slotset for j in occ[pos:pos + n_b]):
+                    out.append(iv)
+                pos += n_b
             return out
 
         for k in range(n_seg):
-            comp_iv[k] = _slice(s.compute_intervals[k],
-                                lambda eh, k=k: sim.occupies_compute(eh, k))
+            comp_iv[k] = _slice(
+                s.compute_intervals[k],
+                lambda eh, k=k: sim.occupies_compute(eh, k),
+                s.compute_batch_sizes[k]
+                if s.compute_batch_sizes else None)
         for k in range(n_hops):
             link_iv[k] = _slice(s.link_intervals[k],
                                 lambda eh, k=k: sim.occupies_link(eh, k))
@@ -504,6 +525,16 @@ class MultiTenantCoachEngine:
         assert tenants, "need at least one tenant"
         self.tenants = list(tenants)
         self.cfg = cfg if cfg is not None else EngineConfig()
+        if self.cfg.auto_batch and self.cfg.batch_slack is None:
+            # derive the batch-size finder's staleness budget from the
+            # tightest tenant SLO: the slack left after a single task's
+            # unloaded latency is what batching may consume
+            slos = [t.slo_latency for t in self.tenants
+                    if t.slo_latency is not None]
+            assert slos, "auto_batch needs batch_slack or a tenant SLO"
+            self.cfg = dataclasses.replace(
+                self.cfg,
+                batch_slack=max(0.0, min(slos) - stage_times.latency))
         # one private engine state per tenant (fresh config copy each, so
         # a tenant-level config edit can never leak across tenants; each
         # tenant also calibrates its own hop probes from hop_calib, so
@@ -517,6 +548,9 @@ class MultiTenantCoachEngine:
                        hop_calib=hop_calib)
             for _ in self.tenants]
         self.links = self.engines[0].links
+        # caps are config-derived, so every per-tenant engine agrees;
+        # the pipeline clamps tier 0 to cap 1 (credit-gated ingress)
+        self.batch_caps = self.engines[0].batch_caps
         self.policy = make_policy(policy,
                                   weights=[t.weight for t in self.tenants])
 
@@ -540,8 +574,12 @@ class MultiTenantCoachEngine:
         accs = [{"exits": 0, "wire": 0.0, "bits": [], "correct": [],
                  "plans": []} for _ in range(n_t)]
 
+        batching = self.batch_caps is not None \
+            and any(c > 1 for c in self.batch_caps)
+
         def tenant_plan_fn(t: int):
             eng, acc, tasks = self.engines[t], accs[t], tasks_by_tenant[t]
+            spec = self.tenants[t]
 
             def plan_fn(i: int, t_arr: float) -> sim.SimPlan:
                 # same shared decision/accounting path as the single-
@@ -551,6 +589,11 @@ class MultiTenantCoachEngine:
                 bw = eng.link.bps_at(t_arr)
                 plan = eng.admit_plan(task, bw, t_arr, classify, acc)
                 sp = plan.as_sim_plan(n_hops)
+                if batching and sp.deadline is None \
+                        and spec.slo_latency is not None:
+                    # per-tenant staleness deadline from the SLO: batch
+                    # formation never holds this task past its target
+                    sp.deadline = t_arr + spec.slo_latency
                 acc["plans"].append(sp)
                 return sp
 
@@ -558,7 +601,8 @@ class MultiTenantCoachEngine:
 
         pipe = MultiTenantHopPipeline(
             n_hops, links=self.links, clock=clock,
-            queue_capacity=self.cfg.queue_capacity, policy=self.policy)
+            queue_capacity=self.cfg.queue_capacity, policy=self.policy,
+            batch_caps=self.batch_caps)
         mt = pipe.run([tenant_plan_fn(t) for t in range(n_t)], arrivals)
 
         reports = []

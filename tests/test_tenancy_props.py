@@ -80,3 +80,129 @@ def test_replayed_stream_conserves_per_tenant_completions(mix, policy):
         # per-tenant full-pipeline completions are FIFO-ordered
         full = [d for d, e in zip(done, exits) if not e]
         assert all(d0 <= d1 + 1e-9 for d0, d1 in zip(full, full[1:]))
+
+
+# ------------------------------------------------ micro-batching properties
+@st.composite
+def batched_mixes(draw):
+    """A tenant mix plus per-tier batch caps, per-plan fixed launch
+    fractions and optional staleness deadlines — the knobs of the greedy
+    drain-up-to-cap-or-deadline batch formation rule."""
+    plans, arrivals, weights = draw(tenant_mixes())
+    n_hops = max((p.n_hops for ps in plans for p in ps), default=1)
+    caps = [draw(st.integers(1, 4)) for _ in range(n_hops + 1)]
+    for ps, arr in zip(plans, arrivals):
+        for p, a in zip(ps, arr):
+            frac = draw(st.floats(0.0, 1.0, allow_nan=False))
+            p.t_fixed = tuple(c * frac for c in p.compute)
+            if draw(st.booleans()):
+                p.deadline = a + draw(st.floats(1e-3, 80e-3))
+    return plans, arrivals, weights, caps
+
+
+@settings(max_examples=40, deadline=None)
+@given(mix=batched_mixes(), policy=st.sampled_from(["fifo", "rr", "wdrr"]))
+def test_batched_multitenant_conserves_tasks_and_stream_order(mix, policy):
+    """Whatever the caps, fixed fractions and deadlines: no task is lost
+    or duplicated, batching never reorders completions within one
+    tenant's stream (per exit tier), and every resource timeline stays
+    sorted and disjoint."""
+    plans, arrivals, weights, caps = mix
+    if not any(plans):
+        return
+    mt = sim.simulate_multitenant_stream(
+        plans, arrivals, make_policy(policy, weights=weights),
+        batch_caps=caps)
+    expected = {(t, i) for t in range(len(plans))
+                for i in range(len(plans[t]))}
+    assert len(mt.order) == len(expected)
+    assert set(mt.order) == expected
+    assert len(mt.stream.done) == len(expected)
+    for t in range(len(plans)):
+        _, done, _ = mt.tenant_view(t)
+        by_tier = {}
+        for d, eh in zip(done, mt.tenant_exit_hops(t)):
+            by_tier.setdefault(eh, []).append(d)
+        for ds in by_tier.values():
+            assert all(d0 <= d1 + 1e-9 for d0, d1 in zip(ds, ds[1:]))
+    for iv in (mt.stream.compute_intervals + mt.stream.link_intervals):
+        assert sim._sorted_disjoint(iv)
+
+
+@settings(max_examples=30, deadline=None)
+@given(mix=batched_mixes(), policy=st.sampled_from(["fifo", "rr", "wdrr"]))
+def test_cap_one_multitenant_is_decision_identical(mix, policy):
+    """All-ones caps route to the untouched legacy replay: admission
+    order and timelines are *bitwise* equal to running without caps
+    (policies are stateful, so each run gets a fresh instance)."""
+    plans, arrivals, weights, caps = mix
+    if not any(plans):
+        return
+    a = sim.simulate_multitenant_stream(
+        plans, arrivals, make_policy(policy, weights=weights))
+    b = sim.simulate_multitenant_stream(
+        plans, arrivals, make_policy(policy, weights=weights),
+        batch_caps=[1] * len(caps))
+    assert a.order == b.order
+    assert a.stream.done == b.stream.done
+    assert a.stream.compute_intervals == b.stream.compute_intervals
+    assert a.stream.link_intervals == b.stream.link_intervals
+
+
+@st.composite
+def batched_streams(draw):
+    """A single admission-ordered stream with caps, fixed fractions and
+    deadlines (tier-0 batching requires non-decreasing arrivals, which
+    cumulative gaps give by construction)."""
+    n_hops = draw(st.integers(1, 3))
+    n = draw(st.integers(1, 20))
+    gaps = draw(st.lists(
+        st.floats(0.0, 5e-3, allow_nan=False, allow_infinity=False),
+        min_size=n, max_size=n))
+    arr = list(np.cumsum([0.0] + gaps[:-1]))
+    plans = []
+    for i in range(n):
+        comp = tuple(
+            draw(st.floats(1e-4, 5e-3)) for _ in range(n_hops + 1))
+        frac = draw(st.floats(0.0, 1.0, allow_nan=False))
+        dl = arr[i] + draw(st.floats(1e-3, 80e-3)) \
+            if draw(st.booleans()) else None
+        plans.append(sim.SimPlan(
+            compute=comp, tx=tuple(draw(st.floats(0.0, 3e-3))
+                                   for _ in range(n_hops)),
+            early_exit=draw(st.booleans()),
+            exit_hop=draw(st.one_of(st.none(), st.integers(0, n_hops))),
+            t_fixed=tuple(c * frac for c in comp), deadline=dl))
+    caps = [draw(st.integers(1, 4)) for _ in range(n_hops + 1)]
+    return plans, arr, caps
+
+
+@settings(max_examples=50, deadline=None)
+@given(stream=batched_streams())
+def test_batched_stream_conserves_orders_and_counts_batches(stream):
+    """Single-stream form of the conservation/no-reordering property,
+    plus the ``compute_batch_sizes`` bookkeeping: batch sizes respect
+    the caps and jointly account for exactly the tasks that occupy each
+    compute tier."""
+    plans, arr, caps = stream
+    res = sim.simulate_stream(plans, arr, batch_caps=caps)
+    assert len(res.done) == len(plans)
+    by_tier = {}
+    for d, eh in zip(res.done, res.exit_hop):
+        by_tier.setdefault(eh, []).append(d)
+    for ds in by_tier.values():
+        assert all(d0 <= d1 + 1e-9 for d0, d1 in zip(ds, ds[1:]))
+    for iv in (res.compute_intervals + res.link_intervals):
+        assert sim._sorted_disjoint(iv)
+    if res.compute_batch_sizes:
+        for k, (ivs, bs) in enumerate(zip(res.compute_intervals,
+                                          res.compute_batch_sizes)):
+            assert len(ivs) == len(bs)
+            occ = sum(1 for eh in res.exit_hop
+                      if sim.occupies_compute(eh, k))
+            assert sum(bs) == occ
+            assert all(1 <= b <= caps[k] for b in bs)
+    # every link transfer stays per-task (links never batch)
+    for k, ivs in enumerate(res.link_intervals):
+        occ = sum(1 for eh in res.exit_hop if sim.occupies_link(eh, k))
+        assert len(ivs) == occ
