@@ -16,7 +16,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 from benchmarks import (ablation, arch_partition, batching, fig1_locality,
                         fig2_schemes, fig5_dynamic, fig6_fig7_bandwidth,
                         kernels_bench, multihop, multitenant, planner,
-                        roofline, table1_latency, table2_context)
+                        roofline, routing, table1_latency, table2_context)
 
 MODULES = {
     "fig1": fig1_locality,
@@ -34,6 +34,7 @@ MODULES = {
     "multitenant": multitenant,  # per-tenant fairness-vs-bubble rows
     "planner": planner,          # offline-search candidate throughput
     "batching": batching,        # micro-batched vs unbatched paired rows
+    "routing": routing,          # replicated-tier throughput-vs-m sweeps
     "roofline": roofline,
 }
 

@@ -39,6 +39,15 @@ realized batch sizes > 1 somewhere on the on rows).  The perf gate:
 each batched row must deliver >= 1.5x its unbatched partner's
 throughput at equal-or-better p99 latency.
 
+``kind = "routing"``: replicated-tier scale-out rows — every
+(model, hops, policy) is a throughput-vs-m sweep on the same overloaded
+stream, reported by BOTH engines (pool simulator and pool executor),
+with ``policy`` in {jsq, po2, random}, ``m`` matching the ``pool_sizes``
+list, and an ``m = 1`` baseline per sweep.  The perf gate applies to the
+informed policies only: for jsq and po2 the ``m = 2`` row must deliver
+>= 1.8x the ``m = 1`` throughput at equal-or-better p99 (random is the
+no-information baseline and is reported ungated).
+
 Rows of the engine-bearing kinds missing an explicit ``engine`` are
 rejected outright (planner rows describe the search, not an executor,
 and carry no engine).
@@ -67,12 +76,24 @@ BATCHING_NUMERIC = (
     "single_task_ms", "mean_latency_ms", "p99_latency_ms",
     "throughput_its", "makespan_ms", "max_stage_ms", "batch_slack_ms",
 )
+ROUTING_NUMERIC = (
+    "single_task_ms", "mean_latency_ms", "p99_latency_ms",
+    "throughput_its", "makespan_ms", "max_stage_ms",
+)
 #: batched throughput must beat the unbatched partner by this factor...
 BATCH_SPEEDUP_MIN = 1.5
 #: ...without giving up tail latency (equal-or-better p99)
 BATCH_P99_TOL = 1 + 1e-9
+#: informed-router (jsq/po2) m=2 throughput vs the m=1 baseline...
+ROUTING_SPEEDUP_MIN = 1.8
+#: ...again at equal-or-better p99
+ROUTING_P99_TOL = 1 + 1e-9
 ENGINES = {"sim", "async"}
 POLICIES = {"fifo", "rr", "wdrr"}
+ROUTER_POLICIES = {"jsq", "po2", "random"}
+#: policies the m=2 scale-out gate applies to (random is the
+#: no-information baseline the comparison exists for)
+GATED_ROUTERS = {"jsq", "po2"}
 
 
 def _check_common(i: int, row: dict) -> None:
@@ -162,6 +183,41 @@ def _check_batching(i: int, row: dict) -> None:
             f"row {i}: unbatched row reports realized batches"
 
 
+def _check_routing(i: int, row: dict) -> None:
+    assert row.get("policy") in ROUTER_POLICIES, \
+        f"row {i}: routing policy must be one of {sorted(ROUTER_POLICIES)}"
+    _check_numeric(i, row, ROUTING_NUMERIC)
+    m = row.get("m")
+    assert isinstance(m, int) and m >= 1, f"row {i}: bad replica count m"
+    sizes = row.get("pool_sizes")
+    assert isinstance(sizes, list) and len(sizes) == row["hops"] and all(
+        isinstance(v, int) and v >= 1 for v in sizes), \
+        f"row {i}: pool_sizes must list {row['hops']} replica counts >= 1"
+    assert max(sizes) == m, f"row {i}: m must match pool_sizes"
+
+
+def _check_routing_sweeps(rows: dict) -> None:
+    """The scale-out gate: for the informed policies, m = 2 must deliver
+    >= 1.8x the m = 1 throughput at equal-or-better p99, per
+    (model, hops, policy, engine) sweep.  Every sweep needs its m = 1
+    baseline; the random baseline is reported but not perf-gated."""
+    for key, by_m in sorted(rows.items()):
+        (_model, _hops, policy, _engine) = key
+        assert 1 in by_m, f"routing {key}: missing m=1 baseline row"
+        if policy not in GATED_ROUTERS or 2 not in by_m:
+            continue
+        base, scaled = by_m[1], by_m[2]
+        speedup = scaled["throughput_its"] / \
+            max(base["throughput_its"], 1e-12)
+        assert speedup >= ROUTING_SPEEDUP_MIN, \
+            f"routing {key}: m=2 throughput speedup {speedup:.2f}x " \
+            f"< {ROUTING_SPEEDUP_MIN}x"
+        assert scaled["p99_latency_ms"] <= \
+            base["p99_latency_ms"] * ROUTING_P99_TOL, \
+            f"routing {key}: m=2 p99 {scaled['p99_latency_ms']:.2f}ms " \
+            f"worse than m=1 {base['p99_latency_ms']:.2f}ms"
+
+
 def _check_batching_pairs(rows: dict) -> None:
     """The perf gate: >= 1.5x throughput at equal-or-better p99, for
     every (model, hops, engine) batched/unbatched pair."""
@@ -183,19 +239,29 @@ def _check_batching_pairs(rows: dict) -> None:
 def validate(path: Path) -> list:
     data = json.loads(path.read_text())
     assert isinstance(data, list) and data, "payload must be a non-empty list"
-    mh_seen, mt_seen, bt_seen = set(), set(), set()
+    mh_seen, mt_seen, bt_seen, rt_seen = set(), set(), set(), set()
     mh_exit = {}
     mt_runs = {}
     bt_pairs = {}
+    rt_sweeps = {}
     for i, row in enumerate(data):
         assert isinstance(row, dict), f"row {i}: not an object"
         kind = row.get("kind", "multihop")
-        assert kind in ("multihop", "multitenant", "planner", "batching"), \
-            f"row {i}: kind {kind!r}"
+        assert kind in ("multihop", "multitenant", "planner", "batching",
+                        "routing"), f"row {i}: kind {kind!r}"
         if kind == "planner":
             _check_planner(i, row)
             continue
         _check_common(i, row)
+        if kind == "routing":
+            _check_routing(i, row)
+            key = (row["model"], row["hops"], row["policy"], row["engine"])
+            assert row["m"] not in rt_sweeps.setdefault(key, {}), \
+                f"row {i}: duplicate routing row for {key} m={row['m']}"
+            rt_sweeps[key][row["m"]] = row
+            rt_seen.add((row["model"], row["hops"], row["policy"],
+                         row["m"], row["engine"]))
+            continue
         if kind == "batching":
             _check_batching(i, row)
             key = (row["model"], row["hops"], row["engine"])
@@ -242,6 +308,9 @@ def validate(path: Path) -> list:
     if bt_seen:
         _require_both_engines(bt_seen, "batching")
         _check_batching_pairs(bt_pairs)
+    if rt_seen:
+        _require_both_engines(rt_seen, "routing")
+        _check_routing_sweeps(rt_sweeps)
     return data
 
 

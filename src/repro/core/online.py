@@ -18,16 +18,31 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 
-def gap_features(x: np.ndarray) -> np.ndarray:
+def gap_features(x: np.ndarray, layout: Optional[str] = None) -> np.ndarray:
     """Global Average Pooling: (C,H,W) -> (C,)  or (S,D) -> (D,)  or batched
-    (B,...) -> (B,C|D).  Concentrates intermediate data into task features F."""
+    (B,...) -> (B,C|D).  Concentrates intermediate data into task features F.
+
+    ``layout`` names the channel axis of rank-3/4 maps explicitly:
+    ``"CHW"`` (channels first, batched form ``(B,C,H,W)``) or ``"HWC"``
+    (channels last, ``(B,H,W,C)``).  ``None`` falls back to the legacy
+    shape heuristic — smaller leading axis means channels-first — which is
+    only a guess: a deep channels-first map like ``(512, 7, 7)`` has
+    ``shape[0] > shape[-1]`` and gets pooled over its *channel* axis,
+    returning 7 spatial means instead of 512 channel means.  Callers that
+    know their runtime's layout should always pass it."""
     x = np.asarray(x)
+    if layout is not None and layout not in ("CHW", "HWC"):
+        raise ValueError(f"layout must be 'CHW' or 'HWC', got {layout!r}")
     if x.ndim == 2:
         return x.mean(axis=0)
     if x.ndim == 3:
-        return x.mean(axis=(1, 2)) if x.shape[0] < x.shape[-1] else x.mean(axis=0).mean(axis=0)
-    if x.ndim == 4:  # (B,C,H,W)
-        return x.mean(axis=(2, 3))
+        if layout is None:  # legacy heuristic (documented fallback)
+            layout = "CHW" if x.shape[0] < x.shape[-1] else "HWC"
+        return x.mean(axis=(1, 2)) if layout == "CHW" else x.mean(axis=(0, 1))
+    if x.ndim == 4:
+        if layout is None:  # batched maps historically assumed (B,C,H,W)
+            layout = "CHW"
+        return x.mean(axis=(2, 3)) if layout == "CHW" else x.mean(axis=(1, 2))
     raise ValueError(f"unsupported feature rank {x.ndim}")
 
 
@@ -39,10 +54,25 @@ def cosine(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     return (sim + 1.0) / 2.0  # map [-1,1] -> [0,1] per Eq. 8 range
 
 
-def separability(sims: np.ndarray) -> float:
-    """Eq. 9 on one similarity-degree vector T."""
+def separability(sims: np.ndarray,
+                 counts: Optional[np.ndarray] = None) -> float:
+    """Eq. 9 on one similarity-degree vector T.
+
+    ``counts`` (the cache's per-label update counts) restricts the
+    statistic to *trained* centers: ``SemanticCache.similarities`` emits
+    exactly 0.0 for an untrained center, so with a single warmed label
+    the second-highest degree t_SH is an artificial 0 and Eq. 9 blows up
+    through ``t_H / max(t_SH, 1e-12)`` — every warm-up task looks
+    maximally separable and exits spuriously.  Fewer than two trained
+    centers have no genuine second-highest degree at all, so the
+    separability is 0 (never exit-eligible)."""
+    sims = np.asarray(sims, dtype=float)
+    if counts is not None:
+        sims = sims[np.asarray(counts) > 0]
+    if len(sims) < 2:
+        return 0.0
     t = np.sort(sims)[::-1]
-    t_h, t_sh = float(t[0]), float(t[1]) if len(t) > 1 else 1e-12
+    t_h, t_sh = float(t[0]), float(t[1])
     return float(np.linalg.norm(sims) * (t_h - t_sh) * t_h / max(t_sh, 1e-12))
 
 
@@ -94,6 +124,13 @@ class SemanticCache:
         self.centers[label] = (m * self.centers[label] + feat) / (m + 1)  # Eq. 7
         self.counts[label] += 1
 
+    @property
+    def n_warm(self) -> int:
+        """Labels whose center has seen at least one update.  Separability
+        (Eq. 9) needs a genuine second-highest degree, so exit decisions
+        are only eligible once ``n_warm >= 2``."""
+        return int(np.count_nonzero(self.counts > 0))
+
     def similarities(self, feat: np.ndarray) -> np.ndarray:
         valid = self.counts > 0
         sims = np.zeros(len(self.centers))
@@ -125,7 +162,7 @@ def calibrate_thresholds(cache: SemanticCache, feats: np.ndarray,
     seps, correct = [], []
     for f, y in zip(feats, labels):
         sims = cache.similarities(f)
-        seps.append(separability(sims))
+        seps.append(separability(sims, cache.counts))
         correct.append(int(np.argmax(sims)) == int(y))
     seps = np.asarray(seps)
     correct = np.asarray(correct, bool)
@@ -273,8 +310,12 @@ class OnlineScheduler:
         if bandwidth_bps is not None:
             self.observe_bandwidth(bandwidth_bps)
         sims = self.cache.similarities(feat)
-        s = separability(sims)
-        if s > self.th.s_ext:
+        s = separability(sims, self.cache.counts)
+        # exit eligibility needs >= 2 warmed labels: with a single warm
+        # center the separability statistic has no second-highest degree
+        # and a cold cache must never terminate tasks (Eq. 9 over trained
+        # centers only; see ``separability``)
+        if self.cache.n_warm >= 2 and s > self.th.s_ext:
             j = int(np.argmax(sims))  # Eq. 10
             if self.update_centers:
                 self.cache.update(feat, j)
@@ -295,8 +336,8 @@ class OnlineScheduler:
             f"no probe calibrated for segment {segment}"
         probe = self.hop_probes[segment - 1]
         sims = probe.cache.similarities(feat)
-        s = separability(sims)
-        if s > probe.thresholds.s_ext:
+        s = separability(sims, probe.cache.counts)
+        if probe.cache.n_warm >= 2 and s > probe.thresholds.s_ext:
             j = int(np.argmax(sims))  # Eq. 10 at tier ``segment``
             if self.update_centers:
                 probe.cache.update(feat, j)

@@ -133,6 +133,10 @@ class PipelineResult:
     # executor's recorded timeline) — empty tuples when not recorded
     compute_intervals: Tuple[Tuple[sim.Interval, ...], ...] = ()
     link_intervals: Tuple[Tuple[sim.Interval, ...], ...] = ()
+    # replicas per compute tier when the run used replicated pools
+    # (() = classic single-replica chain); compute_busy[k] then sums the
+    # tier's replicas, so utilization is against m * makespan
+    pool_sizes: Tuple[int, ...] = ()
 
     # ---- classic 3-resource views
     @property
@@ -186,10 +190,27 @@ class PipelineResult:
         return {"end": self.end_busy, "link": self.link_busy,
                 "cloud": self.cloud_busy}[stage]
 
+    def _capacity(self, stage: Union[str, Tuple[str, int]]) -> float:
+        """Busy-time capacity of a resource over the run: ``makespan``
+        for a serial resource, ``m * makespan`` for a replicated compute
+        tier (so ``bubble_fraction`` stays in ``[0, 1]`` with pools)."""
+        if not self.pool_sizes:
+            return self.makespan
+        if isinstance(stage, tuple):
+            kind, k = stage
+            return self.pool_sizes[k] * self.makespan \
+                if kind == "compute" else self.makespan
+        if stage == "end":
+            return self.pool_sizes[0] * self.makespan
+        if stage == "cloud":
+            return self.pool_sizes[-1] * self.makespan
+        return self.makespan
+
     def bubble_fraction(self, stage: Union[str, Tuple[str, int]] = "cloud"
                         ) -> float:
         busy = self.stage_busy(stage)
-        return 1.0 - busy / self.makespan if self.makespan > 0 else 0.0
+        cap = self._capacity(stage)
+        return 1.0 - busy / cap if self.makespan > 0 else 0.0
 
 
 def plan_from_stage_times(st: StageTimes, early_exit: bool = False,
@@ -224,18 +245,33 @@ def result_from_stream(res: sim.StreamResult) -> PipelineResult:
                           link_intervals=res.link_intervals)
 
 
+def result_from_pool_stream(res: sim.PoolStreamResult) -> PipelineResult:
+    """Wrap a replicated-tier timeline (``sim.simulate_pool_stream`` or
+    the async pool executor) into the engine-facing result type.  The
+    tier view merges each pool's replica intervals; ``pool_sizes`` keeps
+    the replica counts so utilization is judged against
+    ``m * makespan``."""
+    pr = result_from_stream(res.as_stream_result())
+    pr.pool_sizes = tuple(p.m for p in res.pools)
+    return pr
+
+
 def run_pipeline(plans: Sequence[TaskPlan],
                  arrivals: Optional[Sequence[float]] = None,
                  arrival_period: float = 0.0,
                  link: Optional[LinkProfile] = None,
                  links: Optional[Sequence[Optional[LinkProfile]]] = None,
-                 batch_caps: Optional[Sequence[int]] = None
-                 ) -> PipelineResult:
+                 batch_caps: Optional[Sequence[int]] = None,
+                 pools: Optional[Sequence] = None,
+                 router=None) -> PipelineResult:
     """Execute the task stream.  ``link`` (classic) or ``links`` (one per
     hop) with a bandwidth trace re-integrates each task's transmission
     time at its actual start time (dynamic networks, Fig. 5).
     ``batch_caps`` enables per-tier continuous micro-batching (see
-    ``sim.simulate_stream``)."""
+    ``sim.simulate_stream``).  ``pools`` (per-tier replica pools, see
+    ``sim.PoolSpec``) with a ``router`` (``serving.routing`` policy,
+    duck-typed here so the core stays serving-free) runs the replicated
+    DAG path instead of the serial chain."""
     n = len(plans)
     if arrivals is None:
         arrivals = [i * arrival_period for i in range(n)]
@@ -245,8 +281,14 @@ def run_pipeline(plans: Sequence[TaskPlan],
     # early-exited (1-hop) plans on a 3-tier deployment still accounts
     # every tier's (idle) resources
     n_hops = max(max(p.n_hops for p in plans), len(links))
-    res = sim.simulate_stream([p.as_sim_plan(n_hops) for p in plans],
-                              arrivals, links=links, batch_caps=batch_caps)
+    sim_plans = [p.as_sim_plan(n_hops) for p in plans]
+    if pools is not None:
+        assert router is not None, "replicated tiers need a router policy"
+        pres = sim.simulate_pool_stream(sim_plans, arrivals, pools, router,
+                                        links=links, batch_caps=batch_caps)
+        return result_from_pool_stream(pres)
+    res = sim.simulate_stream(sim_plans, arrivals, links=links,
+                              batch_caps=batch_caps)
     return result_from_stream(res)
 
 

@@ -64,11 +64,23 @@ serial resources.  The async multi-tenant executor
 gate with event-driven ingress credits, so the two admission orders —
 and therefore the two timelines — are differentially pinned by
 ``tests/test_tenancy.py``.
+
+``simulate_pool_stream`` generalizes the chain to a DAG of *resource
+pools*: tier ``k`` becomes ``PoolSpec`` — ``m`` replica resources with
+heterogeneous speed multipliers — behind a pluggable router policy
+(join-shortest-queue / power-of-two-choices / tenant-affinity, in
+``repro.serving.routing``) that places each task at enqueue time in
+per-stream order; a per-pool sequencer restores admission order toward
+each serial hop link.  ``m = 1`` unit pools on every tier reduce
+bit-identically to ``simulate_stream``, and the async pool executor
+(``repro.serving.async_engine.AsyncHopPipeline`` with ``pools=``) is
+differentially pinned to it by ``tests/test_pools.py``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.costs import DeviceProfile, LinkProfile, ModelGraph
@@ -380,7 +392,8 @@ def batched_service_time(plans: Sequence[SimPlan], k: int) -> float:
 
 def greedy_batch_size(k: int, cap: int, s: float,
                       plans: Sequence[SimPlan],
-                      ready: Sequence[float]) -> int:
+                      ready: Sequence[float],
+                      speed: float = 1.0) -> int:
     """Greedy drain-up-to-cap-or-deadline batch formation rule.
 
     ``plans[0]`` is the head task the worker woke up for; ``plans[1:]``
@@ -394,7 +407,11 @@ def greedy_batch_size(k: int, cap: int, s: float,
     tightest deadline among its members (the head itself is never
     deadline-gated — it must run regardless).  The first failure stops
     formation, so a batch is always a FIFO prefix: batching never
-    reorders tasks."""
+    reorders tasks.
+
+    ``speed`` scales the batch's service time for heterogeneous pool
+    replicas (``PoolSpec.speeds``); the default 1.0 keeps the chain
+    path's float arithmetic bit-identical (``s + 1.0 * t == s + t``)."""
     inf = float("inf")
     d0 = plans[0].deadline
     dmin = d0 if d0 is not None else inf
@@ -404,7 +421,7 @@ def greedy_batch_size(k: int, cap: int, s: float,
         if ready[n] > s:
             break
         nd = min(dmin, p.deadline if p.deadline is not None else inf)
-        if s + batched_service_time(plans[:n + 1], k) > nd:
+        if s + speed * batched_service_time(plans[:n + 1], k) > nd:
             break
         dmin = nd
         n += 1
@@ -801,3 +818,423 @@ def simulate_multitenant_stream(
                           batch_caps=batch_caps)
     return MultiTenantStreamResult(stream=res, order=tuple(order),
                                    n_tenants=len(plans))
+
+
+# ============================================================ resource pools
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    """One tier as a pool of ``m = len(speeds)`` replica resources.
+
+    ``speeds[r]`` is replica ``r``'s service-time multiplier: a plan's
+    segment-``k`` occupation on replica ``r`` costs
+    ``speeds[r] * plan.compute[k]`` (so 1.0 is the chain's reference
+    device, 2.0 a half-speed replica, 0.5 a double-speed one).  A pool
+    of one unit-speed replica is exactly the chain's serial resource —
+    ``simulate_pool_stream`` over all-``m=1`` unit pools is bit-identical
+    to ``simulate_stream`` (tested)."""
+    speeds: Tuple[float, ...] = (1.0,)
+
+    def __post_init__(self):
+        object.__setattr__(self, "speeds",
+                           tuple(float(s) for s in self.speeds))
+        assert self.speeds, "a pool needs at least one replica"
+        assert all(s > 0.0 for s in self.speeds), \
+            "replica speed multipliers must be positive"
+
+    @property
+    def m(self) -> int:
+        return len(self.speeds)
+
+
+def as_pools(pools, n_seg: int) -> Tuple[PoolSpec, ...]:
+    """Normalize a per-tier pool description into ``PoolSpec`` tuples.
+
+    Each entry may be a ``PoolSpec``, an ``int`` replica count (unit
+    speeds), or a sequence of speed multipliers.  Missing tail entries
+    default to a single unit-speed replica (the chain resource)."""
+    out: List[PoolSpec] = []
+    for k in range(n_seg):
+        p = pools[k] if pools is not None and k < len(pools) else 1
+        if isinstance(p, PoolSpec):
+            out.append(p)
+        elif isinstance(p, int):
+            assert p >= 1, "replica count must be >= 1"
+            out.append(PoolSpec(speeds=(1.0,) * p))
+        else:
+            out.append(PoolSpec(speeds=tuple(float(s) for s in p)))
+    return tuple(out)
+
+
+@dataclasses.dataclass
+class PoolStreamResult:
+    """Per-replica accounting of a stream replayed over resource pools.
+
+    The tier-level lists of ``StreamResult`` split per replica:
+    ``replica_intervals[k][r]`` / ``replica_busy[k][r]`` /
+    ``replica_batch_sizes[k][r]`` describe replica ``r`` of tier ``k``
+    (links stay serial, one per hop).  ``routes[i][k]`` names the replica
+    task ``i`` ran on at tier ``k`` (``None`` = the task never reached
+    that tier, i.e. it exited upstream).  ``as_stream_result()`` merges
+    the per-replica timelines back into the tier-level ``StreamResult``
+    shape for metric code that does not care about placement."""
+    arrivals: List[float]
+    done: List[float]
+    early_exit: List[bool]
+    exit_hop: List[Optional[int]]
+    makespan: float
+    link_busy: Tuple[float, ...]
+    link_intervals: Tuple[Tuple[Interval, ...], ...]
+    replica_busy: Tuple[Tuple[float, ...], ...]
+    replica_intervals: Tuple[Tuple[Tuple[Interval, ...], ...], ...]
+    replica_batch_sizes: Tuple[Tuple[Tuple[int, ...], ...], ...]
+    routes: Tuple[Tuple[Optional[int], ...], ...]
+    pools: Tuple[PoolSpec, ...] = ()
+
+    @property
+    def compute_busy(self) -> Tuple[float, ...]:
+        """Tier-level busy time: sum over the tier's replicas."""
+        return tuple(sum(rb) for rb in self.replica_busy)
+
+    def as_stream_result(self) -> StreamResult:
+        """Tier-level view: per-tier intervals merged across replicas in
+        start-time order (stable by replica index), batch sizes carried
+        along; emitted batch sizes only when some batch held > 1 task,
+        matching ``simulate_stream``'s empty-means-singletons convention."""
+        comp_iv: List[Tuple[Interval, ...]] = []
+        comp_bs: List[Tuple[int, ...]] = []
+        for k in range(len(self.replica_intervals)):
+            tagged = []
+            for r, ivs in enumerate(self.replica_intervals[k]):
+                bss = self.replica_batch_sizes[k][r]
+                for iv, bs in zip(ivs, bss):
+                    tagged.append((iv[0], iv[1], r, bs))
+            tagged.sort(key=lambda t: (t[0], t[1], t[2]))
+            comp_iv.append(tuple((t[0], t[1]) for t in tagged))
+            comp_bs.append(tuple(t[3] for t in tagged))
+        batched = any(b > 1 for bs in comp_bs for b in bs)
+        return StreamResult(
+            arrivals=list(self.arrivals), done=list(self.done),
+            early_exit=list(self.early_exit), makespan=self.makespan,
+            compute_busy=self.compute_busy, link_busy=self.link_busy,
+            compute_intervals=tuple(comp_iv),
+            link_intervals=self.link_intervals,
+            exit_hop=list(self.exit_hop),
+            compute_batch_sizes=tuple(comp_bs) if batched else ())
+
+
+def simulate_pool_stream(plans: Sequence[SimPlan],
+                         arrivals: Sequence[float],
+                         pools,
+                         router,
+                         links: Optional[Sequence[Optional[LinkProfile]]] = None,
+                         batch_caps: Optional[Sequence[int]] = None,
+                         tenants: Optional[Sequence[Optional[int]]] = None,
+                         enqueues: Optional[Sequence[float]] = None
+                         ) -> PoolStreamResult:
+    """Replay a task stream over a DAG of per-tier *resource pools*.
+
+    Generalizes ``simulate_stream``: tier ``k`` is ``pools[k].m`` replica
+    resources (heterogeneous ``speeds`` allowed) behind a router; links
+    stay serial FIFO.  ``router`` is any object with ``reset(pools)`` and
+    ``route(k, ready, compute, tenant) -> replica`` (the policies live in
+    ``repro.serving.routing``; like the admission policies, the state
+    machine is shared with the executor so the differential harness pins
+    the routing *semantics*).  Routing decisions are made at
+    enqueue/arrival time in per-stream order, and router state is kept
+    strictly per tier, so the executor's interleaving of tiers in wall
+    time reaches identical decisions to this tier-by-tier staged replay.
+
+    Per tier the staged replay is: (1) *dispatch* — route every pending
+    task, in admission order, to a replica; (2) *replica replay* — each
+    replica drains its own FIFO sub-queue under the chain's batching rule
+    (``greedy_batch_size`` with the replica's ``speed``); (3)
+    *sequencer* — completed tasks are forwarded to the hop link in
+    admission order, each at the running max of the release instants so
+    far (the executor's per-pool sequencer worker realizes the same
+    merge); (4) *link* — the serial hop link replays exactly as in
+    ``simulate_stream``.  With every pool at ``m = 1`` and unit speed,
+    every expression reduces to the chain path's — bit-identical
+    timelines (tested).
+
+    ``tenants[i]`` tags task ``i`` for tenant-affinity routing;
+    ``enqueues[i]`` overrides task ``i``'s tier-0 enqueue instant (used
+    by the credit-gated multi-tenant admission; both must be
+    non-decreasing — admission order)."""
+    assert plans, "empty stream"
+    n_hops = len(plans[0].tx)
+    n_seg = n_hops + 1
+    pools = as_pools(pools, n_seg)
+    caps = [int(batch_caps[k]) if batch_caps is not None
+            and k < len(batch_caps) else 1 for k in range(n_seg)]
+    assert all(c >= 1 for c in caps), "batch caps must be >= 1"
+    for p in plans:
+        assert len(p.tx) == n_hops, "mixed hop counts in one stream"
+    if tenants is None:
+        tenants = [None] * len(plans)
+    assert len(tenants) == len(plans)
+    if enqueues is None:
+        assert all(a0 <= a1 for a0, a1 in zip(arrivals, arrivals[1:])), \
+            "pool streams need non-decreasing arrivals (admission order)"
+    else:
+        assert len(enqueues) == len(plans)
+        assert all(e0 <= e1 for e0, e1 in zip(enqueues, enqueues[1:])), \
+            "enqueue instants must be non-decreasing (admission order)"
+    router.reset(pools)
+
+    replica_busy: List[List[float]] = [[0.0] * p.m for p in pools]
+    replica_iv: List[List[List[Interval]]] = \
+        [[[] for _ in range(p.m)] for p in pools]
+    replica_bs: List[List[List[int]]] = \
+        [[[] for _ in range(p.m)] for p in pools]
+    link_busy = [0.0] * n_hops
+    link_iv: List[List[Interval]] = [[] for _ in range(n_hops)]
+    link_free = [0.0] * n_hops
+    done: List[float] = [0.0] * len(plans)
+    routes: List[List[Optional[int]]] = [[None] * n_seg for _ in plans]
+
+    # pending task state entering the current tier, FIFO by admission:
+    # (task index, queue-enqueue instant, input-ready instant, data-done)
+    pend: List[Tuple[int, float, float, float]] = []
+    enq = 0.0
+    for i, arr in enumerate(arrivals):
+        if enqueues is not None:
+            enq = float(enqueues[i])
+        else:
+            enq = arr if arr > enq else enq   # the admitter is serial
+        pend.append((i, enq, float(arr), float(arr)))
+
+    for k in range(n_seg):
+        cap = caps[k]
+        m = pools[k].m
+        speeds = pools[k].speeds
+        # ---- dispatch: the pool's router assigns every pending task to a
+        # replica, in admission order (the executor's dispatcher worker
+        # makes the same calls, in the same order, on the same state)
+        assign: List[List[Tuple[int, float, float, float]]] = \
+            [[] for _ in range(m)]
+        for ent in pend:
+            r = router.route(k, ent[2], plans[ent[0]].compute[k],
+                             tenants[ent[0]])
+            assert 0 <= r < m, f"router placed task on replica {r} of {m}"
+            routes[ent[0]][k] = r
+            assign[r].append(ent)
+        # ---- replica replay: each replica drains its own FIFO sub-queue
+        # under the chain's drain-up-to-cap-or-deadline batching rule
+        # release[idx] = (release instant, tx_ready | None if terminal)
+        release: Dict[int, Tuple[float, Optional[float]]] = {}
+        for r in range(m):
+            speed = speeds[r]
+            sub = assign[r]
+            free = 0.0
+            i = 0
+            while i < len(sub):
+                idx0, enq0, ready0, dd0 = sub[i]
+                wake = max(enq0, free)
+                s = max(ready0, wake)
+                n_b = 1
+                if cap > 1:
+                    j = i + 1
+                    while j < len(sub) and sub[j][1] <= wake:
+                        j += 1
+                    cand = sub[i:j]
+                    n_b = greedy_batch_size(
+                        k, cap, s, [plans[e[0]] for e in cand],
+                        [e[2] for e in cand], speed=speed)
+                batch = sub[i:i + n_b]
+                i += n_b
+                if n_b == 1:
+                    p = plans[idx0]
+                    comp = speed * p.compute[k]
+                    replica_busy[k][r] += comp
+                    replica_iv[k][r].append((s, s + comp))
+                    replica_bs[k][r].append(1)
+                    fin = max(s + comp, dd0)
+                    free = fin
+                    if k == n_hops or (p.exit_hop is not None
+                                       and k >= p.exit_hop):
+                        done[idx0] = fin
+                        release[idx0] = (fin, None)
+                    else:
+                        off = p.tx_offset[k]
+                        tx_ready = fin if off is None or off >= comp \
+                            else s + off
+                        release[idx0] = (tx_ready, tx_ready)
+                    continue
+                dur = speed * batched_service_time(
+                    [plans[e[0]] for e in batch], k)
+                replica_busy[k][r] += dur
+                replica_iv[k][r].append((s, s + dur))
+                replica_bs[k][r].append(n_b)
+                end = s + dur
+                fin = end
+                for (idx_m, _, _, dd_m) in batch:
+                    p = plans[idx_m]
+                    fin = max(end, dd_m)   # data-done gates each completion
+                    if k == n_hops or (p.exit_hop is not None
+                                       and k >= p.exit_hop):
+                        done[idx_m] = fin
+                        release[idx_m] = (fin, None)
+                    else:
+                        release[idx_m] = (fin, fin)
+                free = fin
+
+        if k == n_hops:
+            break
+        # ---- sequencer: restore admission order toward the serial link.
+        # A task can go on the wire only once every earlier task has been
+        # released by its replica (forwarded or declared terminal), so its
+        # hand-off instant is the running max of release instants — on an
+        # m=1 unit pool releases are already monotone and this is the
+        # identity (bitwise chain equivalence).
+        fwd = 0.0
+        nxt: List[Tuple[int, float, float]] = []
+        for ent in pend:
+            rel, tx_ready = release[ent[0]]
+            fwd = rel if rel > fwd else fwd
+            if tx_ready is not None:
+                nxt.append((ent[0], tx_ready, fwd))
+        # ---- link k: serial FIFO, same expressions as simulate_stream
+        new_pend: List[Tuple[int, float, float, float]] = []
+        for (idx, tx_ready, fwd_j) in nxt:
+            p = plans[idx]
+            t_start = max(tx_ready, fwd_j, link_free[k])
+            t_dur = p.tx[k]
+            lk = links[k] if links is not None and k < len(links) else None
+            if lk is not None and lk.trace is not None and t_dur > 0:
+                bits = t_dur * lk.bandwidth_bps
+                t_dur = lk.transfer_time(bits, t_start)
+            t_done = t_start + t_dur
+            link_free[k] = t_done
+            link_busy[k] += t_dur
+            link_iv[k].append((t_start, t_done))
+            roff = p.rx_offset[k]
+            c_ready = t_done if roff is None \
+                else max(t_start + roff, tx_ready)
+            fwd_frac = min(max(c_ready - t_start, 0.0), t_dur)
+            new_pend.append((idx, t_start + fwd_frac, c_ready, t_done))
+        pend = new_pend
+
+    arr_list = list(arrivals)
+    makespan = max(done) - min(arr_list)
+    return PoolStreamResult(
+        arrivals=arr_list, done=done,
+        early_exit=[p.exit_hop is not None for p in plans],
+        exit_hop=[p.exit_hop for p in plans],
+        makespan=makespan,
+        link_busy=tuple(link_busy),
+        link_intervals=tuple(tuple(iv) for iv in link_iv),
+        replica_busy=tuple(tuple(rb) for rb in replica_busy),
+        replica_intervals=tuple(tuple(tuple(iv) for iv in tier)
+                                for tier in replica_iv),
+        replica_batch_sizes=tuple(tuple(tuple(bs) for bs in tier)
+                                  for tier in replica_bs),
+        routes=tuple(tuple(rt) for rt in routes),
+        pools=pools)
+
+
+def multitenant_pool_admission(
+        plans: Sequence[Sequence[SimPlan]],
+        arrivals: Sequence[Sequence[float]],
+        policy,
+        pools,
+        router) -> Tuple[List[TenantSlot], List[float]]:
+    """Pool-ingress admission gate: merge per-tenant streams gated by
+    *pool* ingress credits.
+
+    Generalizes ``multitenant_admission_order`` from one ingress resource
+    to a tier-0 pool of ``m`` replicas: a credit is a token issued the
+    moment *any* tier-0 replica frees, so up to ``m`` tasks are in flight
+    at the ingress at once.  Arithmetically the credit pool is a min-heap
+    of completion instants seeded with ``m`` zeros (the executor's
+    replicas each put one credit before their first get and one at every
+    completion): each dispatch pops the earliest credit ``c`` and happens
+    at ``t_d = max(c, earliest pending arrival)``; the admitted head is
+    routed (``router.route`` on tier 0 — the same call sequence the
+    replay and the executor's dispatcher make), and the task's completion
+    on its replica is pushed back as the next credit.
+
+    Returns ``(order, enqueues)``: the admission sequence plus each
+    task's dispatch instant ``t_d`` — the replay needs it because under
+    affinity-style routing a task can be held by the credit gate past its
+    routed replica's free instant."""
+    n_t = len(plans)
+    assert len(arrivals) == n_t
+    for t in range(n_t):
+        assert len(plans[t]) == len(arrivals[t]), f"tenant {t} length mismatch"
+        assert all(a0 <= a1 for a0, a1 in zip(arrivals[t], arrivals[t][1:])), \
+            f"tenant {t} arrivals must be non-decreasing"
+    n_seg = len(plans[0][0].compute) if plans and plans[0] else 1
+    pools = as_pools(pools, n_seg)
+    router.reset(pools)
+    speeds = pools[0].speeds
+    credits = [0.0] * pools[0].m
+    heapq.heapify(credits)
+    free0 = [0.0] * pools[0].m
+    total = sum(len(p) for p in plans)
+    heads = [0] * n_t
+    order: List[TenantSlot] = []
+    enqueues: List[float] = []
+    policy.reset(n_t)
+    while len(order) < total:
+        pend = [t for t in range(n_t) if heads[t] < len(plans[t])]
+        t_min = min(arrivals[t][heads[t]] for t in pend)
+        c = heapq.heappop(credits)
+        t_d = max(c, t_min)
+        cands = [t for t in pend if arrivals[t][heads[t]] <= t_d]
+        info = {t: (arrivals[t][heads[t]], heads[t], plans[t][heads[t]])
+                for t in cands}
+        t = policy.pick(cands, info)
+        assert t in info, f"policy picked non-candidate tenant {t}"
+        i = heads[t]
+        heads[t] += 1
+        order.append((t, i))
+        enqueues.append(t_d)
+        arr = arrivals[t][i]
+        p = plans[t][i]
+        r = router.route(0, arr, p.compute[0], t)
+        # same float expressions as the replay's tier-0 replica:
+        # wake = max(enq, free), s = max(ready, wake), fin = s + speed*c
+        s = max(arr, max(t_d, free0[r]))
+        fin = s + speeds[r] * p.compute[0]
+        free0[r] = fin
+        heapq.heappush(credits, fin)
+    return order, enqueues
+
+
+@dataclasses.dataclass
+class MultiTenantPoolStreamResult(MultiTenantStreamResult):
+    """Multi-tenant result over pooled tiers: the tenant-tagged
+    tier-level view (``stream`` is the merged ``as_stream_result()``)
+    plus the per-replica pool timeline in ``pool``."""
+    pool: Optional[PoolStreamResult] = None
+
+
+def simulate_multitenant_pool_stream(
+        plans: Sequence[Sequence[SimPlan]],
+        arrivals: Sequence[Sequence[float]],
+        policy,
+        pools,
+        router,
+        links: Optional[Sequence[Optional[LinkProfile]]] = None,
+        batch_caps: Optional[Sequence[int]] = None
+        ) -> MultiTenantPoolStreamResult:
+    """Replay tagged multi-tenant streams over pooled tiers: compute the
+    pool-credit admission order, then replay the merged tenant-tagged
+    stream with ``simulate_pool_stream``.  The ingress tier's batch cap
+    is forced to 1 — admission stays credit-gated one task per credit —
+    but every tier-0 *replica* still admits independently, so ingress
+    throughput scales with the pool."""
+    order, enqueues = multitenant_pool_admission(
+        plans, arrivals, policy, pools, router)
+    assert order, "empty multi-tenant stream"
+    merged_plans = [plans[t][i] for (t, i) in order]
+    merged_arr = [arrivals[t][i] for (t, i) in order]
+    merged_tenants = [t for (t, _) in order]
+    if batch_caps is not None:
+        batch_caps = [1] + [int(c) for c in batch_caps[1:]]
+    res = simulate_pool_stream(merged_plans, merged_arr, pools, router,
+                               links=links, batch_caps=batch_caps,
+                               tenants=merged_tenants, enqueues=enqueues)
+    return MultiTenantPoolStreamResult(stream=res.as_stream_result(),
+                                       order=tuple(order),
+                                       n_tenants=len(plans), pool=res)

@@ -4,6 +4,10 @@ from repro.serving.async_engine import (AsyncCoachEngine, AsyncHopPipeline,
 from repro.serving.base import EngineConfig, EngineStats
 from repro.serving.engine import CoachEngine
 from repro.serving.generate import generate
+from repro.serving.routing import (ROUTER_POLICIES, JoinShortestQueue,
+                                   PowerOfTwoChoices, RandomRouter,
+                                   RouterPolicy, TenantAffinity,
+                                   make_router)
 from repro.serving.tenancy import (ADMISSION_POLICIES, FifoAdmission,
                                    MultiTenantCoachEngine,
                                    MultiTenantHopPipeline,

@@ -35,6 +35,32 @@ differential test ``tests/test_async_engine.py`` pins):
                          the transfer's actual virtual start
   =====================  ==========================================
 
+With ``pools=`` the chain generalizes to *replicated tiers*
+(``core.sim.simulate_pool_stream``; pinned by ``tests/test_pools.py``):
+
+  ==========================  =====================================
+  ``simulate_pool_stream``    ``AsyncHopPipeline(pools=...)``
+  ==========================  =====================================
+  dispatch (router placing    one *dispatcher* worker per tier: gets
+  each pending task, in       from the pool input queue, calls
+  admission order)            ``router.route`` per task in seq order,
+                              forwards to the chosen replica's queue
+  replica replay (per-        one worker per replica: the chain
+  replica FIFO + batching,    compute worker with its service times
+  ``speed * compute[k]``)     scaled by ``PoolSpec.speeds[r]``
+  sequencer (running max of   one *sequencer* worker per hop: buffers
+  release instants restores   ``(seq, msg)`` releases and forwards to
+  admission order)            the serial link strictly in seq order
+  pool ingress credits        every tier-0 replica puts one credit
+  (min-heap of completion     before each ``get`` — a token the
+  instants, ``m`` zeros)      moment *any* ingress replica frees
+  ==========================  =====================================
+
+Router state is strictly per tier and never reads the clock, so the
+executor's wall-time interleaving of tiers reaches the same placements
+as the simulator's tier-by-tier staged replay (see
+``repro.serving.routing``).
+
 Timing comes from a pluggable clock: ``VirtualClock`` is a deterministic
 discrete-event driver (timers fire only when every worker is blocked, so
 a run is a bit-reproducible event simulation — this is what makes the
@@ -328,6 +354,8 @@ class _Msg:
     ready_at: float     # earliest time the receiving resource may start it
     data_done: float    # when the upstream transfer fully lands (c_done gate)
     payload: Any = None
+    tenant: Optional[int] = None   # tag for tenant-affinity routing
+    seq: int = 0                   # per-tier dispatch order (pool sequencer)
 
 
 _STOP = object()
@@ -345,7 +373,8 @@ class AsyncHopPipeline:
                  links: Optional[Sequence[Optional[LinkProfile]]] = None,
                  clock=None, queue_capacity: int = 0,
                  segment_fn: Optional[Callable[[int, int, Any], Any]] = None,
-                 batch_caps: Optional[Sequence[int]] = None):
+                 batch_caps: Optional[Sequence[int]] = None,
+                 pools=None, router=None):
         assert n_hops >= 1
         self.n_hops = n_hops
         self.n_seg = n_hops + 1
@@ -360,6 +389,13 @@ class AsyncHopPipeline:
             for k, c in enumerate(batch_caps[:self.n_seg]):
                 assert int(c) >= 1, "batch caps must be >= 1"
                 self.batch_caps[k] = int(c)
+        # replicated tiers: per-tier PoolSpec + a router policy object
+        # (repro.serving.routing); None = the classic 2n+1 chain
+        self.pools = sim.as_pools(pools, self.n_seg) \
+            if pools is not None else None
+        if self.pools is not None:
+            assert router is not None, "pool execution needs a router policy"
+        self.router = router
         self.outputs: dict = {}
 
     def run(self, plan_fn: Callable[[int, float], Any], n_tasks: int,
@@ -384,7 +420,15 @@ class AsyncHopPipeline:
         so a policy admitter can gate dispatch on the shared ingress
         resource (and, through bounded hop queues, on downstream
         backpressure).  With ``admit_fn`` set, ``plan_fn``/``arrivals``/
-        ``payloads`` are ignored."""
+        ``payloads`` are ignored.
+
+        With ``pools=`` configured the run executes the replicated-tier
+        topology instead and returns a ``sim.PoolStreamResult`` (per-
+        replica timelines + routes); ``credits`` then receives one token
+        whenever *any* tier-0 replica is about to block on its queue."""
+        if self.pools is not None:
+            return self._run_pool(plan_fn, n_tasks, arrivals, payloads,
+                                  admit_fn)
         assert n_tasks > 0
         assert admit_fn is not None or (arrivals is not None
                                         and len(arrivals) >= n_tasks)
@@ -573,6 +617,258 @@ class AsyncHopPipeline:
             compute_batch_sizes=tuple(tuple(b) for b in comp_bs)
             if batching else ())
 
+    def _run_pool(self, plan_fn, n_tasks: int,
+                  arrivals: Optional[Sequence[float]],
+                  payloads: Optional[Sequence[Any]] = None,
+                  admit_fn: Optional[Callable] = None
+                  ) -> sim.PoolStreamResult:
+        """Replicated-tier topology: per tier one dispatcher worker, one
+        worker per replica, and (before each hop link) one sequencer
+        worker restoring admission order (see the module correspondence
+        table).  Differentially pinned to ``sim.simulate_pool_stream``."""
+        assert n_tasks > 0
+        assert admit_fn is not None or (arrivals is not None
+                                        and len(arrivals) >= n_tasks)
+        clock = self.clock
+        n_hops, n_seg = self.n_hops, self.n_seg
+        pools, router = self.pools, self.router
+        router.reset(pools)
+        replica_busy: List[List[float]] = [[0.0] * p.m for p in pools]
+        replica_iv: List[List[List[sim.Interval]]] = \
+            [[[] for _ in range(p.m)] for p in pools]
+        replica_bs: List[List[List[int]]] = \
+            [[[] for _ in range(p.m)] for p in pools]
+        link_busy = [0.0] * n_hops
+        link_iv: List[List[sim.Interval]] = [[] for _ in range(n_hops)]
+        done = [0.0] * n_tasks
+        exit_hops: List[Optional[int]] = [None] * n_tasks
+        routes: List[List[Optional[int]]] = \
+            [[None] * n_seg for _ in range(n_tasks)]
+        arrs = [0.0] * n_tasks if admit_fn is not None \
+            else list(arrivals[:n_tasks])
+        self.outputs = {}
+        credits = HopQueue(clock) if admit_fn is not None else None
+
+        def record(idx: int, arrival: float):
+            arrs[idx] = arrival
+
+        async def admit(q0: HopQueue):
+            for i in range(n_tasks):
+                arr = arrivals[i]
+                await clock.sleep_until(arr)
+                plan = plan_fn(i, arr)
+                if isinstance(plan, TaskPlan):
+                    plan = plan.as_sim_plan(n_hops)
+                assert len(plan.tx) == n_hops, "plan/deployment hop mismatch"
+                payload = payloads[i] if payloads is not None else None
+                await q0.put(_Msg(i, plan, ready_at=arr, data_done=arr,
+                                  payload=payload))
+            await q0.put(_STOP)
+
+        async def dispatcher(k: int, qin: HopQueue,
+                             rqs: Sequence[HopQueue]):
+            # routes in strict queue (= admission) order; decisions read
+            # only the message's carried ready time and the router's own
+            # per-tier state, never the clock, so they match the staged
+            # simulator's placements exactly
+            seq = 0
+            while True:
+                msg = await qin.get()
+                if msg is _STOP:
+                    for rq in rqs:
+                        await rq.put(_STOP)
+                    return
+                r = router.route(k, msg.ready_at, msg.plan.compute[k],
+                                 msg.tenant)
+                routes[msg.idx][k] = r
+                msg.seq = seq
+                seq += 1
+                await rqs[r].put(msg)
+
+        async def replica_worker(k: int, r: int, qin: HopQueue,
+                                 sq: Optional[HopQueue]):
+            # the chain compute worker, speed-scaled; completions are
+            # released to the pool's sequencer as (seq, msg | None)
+            cap = self.batch_caps[k]
+            speed = pools[k].speeds[r]
+            while True:
+                if k == 0 and credits is not None:
+                    await credits.put(None)
+                msg = await qin.get()
+                if msg is _STOP:
+                    if sq is not None:
+                        await sq.put(_STOP)
+                    return
+                if cap > 1:
+                    # membership against this replica's queue at the wake
+                    # instant (same rule as the chain batching worker)
+                    await clock.settle()
+                    cand = [msg]
+                    for m in qin.snapshot():
+                        if m is _STOP:
+                            break
+                        cand.append(m)
+                    await clock.sleep_until(msg.ready_at)
+                    s = clock.now
+                    n_b = sim.greedy_batch_size(
+                        k, cap, s, [m.plan for m in cand],
+                        [m.ready_at for m in cand], speed=speed)
+                    if n_b > 1:
+                        batch = [msg] + qin.drain(n_b - 1)
+                        dur = speed * sim.batched_service_time(
+                            [m.plan for m in batch], k)
+                        if self.segment_fn is not None:
+                            for m in batch:
+                                m.payload = self.segment_fn(
+                                    k, m.idx, m.payload)
+                        replica_busy[k][r] += dur
+                        replica_iv[k][r].append((s, s + dur))
+                        replica_bs[k][r].append(len(batch))
+                        await clock.sleep(dur)
+                        for m in batch:
+                            await clock.sleep_until(m.data_done)
+                            p = m.plan
+                            if k == n_hops or (p.exit_hop is not None
+                                               and k >= p.exit_hop):
+                                done[m.idx] = clock.now
+                                exit_hops[m.idx] = p.exit_hop
+                                self.outputs[m.idx] = m.payload
+                                if sq is not None:
+                                    await sq.put((m.seq, None))
+                            else:
+                                await sq.put((m.seq, _Msg(
+                                    m.idx, p, ready_at=clock.now,
+                                    data_done=clock.now,
+                                    payload=m.payload, tenant=m.tenant)))
+                        continue
+                await clock.sleep_until(msg.ready_at)
+                start = clock.now             # = max(ready, replica free)
+                p = msg.plan
+                comp = speed * p.compute[k]
+                if self.segment_fn is not None:
+                    msg.payload = self.segment_fn(k, msg.idx, msg.payload)
+                replica_busy[k][r] += comp
+                replica_iv[k][r].append((start, start + comp))
+                replica_bs[k][r].append(1)
+                data_done = msg.data_done
+                last = k == n_hops or \
+                    (p.exit_hop is not None and k >= p.exit_hop)
+                off = None if last else p.tx_offset[k]
+                if last or off is None or off >= comp:   # serial stage
+                    await clock.sleep(comp)
+                    await clock.sleep_until(data_done)   # c_done gate
+                    if last:
+                        done[msg.idx] = clock.now
+                        exit_hops[msg.idx] = p.exit_hop
+                        self.outputs[msg.idx] = msg.payload
+                        if sq is not None:
+                            await sq.put((msg.seq, None))
+                    else:
+                        await sq.put((msg.seq, _Msg(
+                            msg.idx, p, ready_at=clock.now,
+                            data_done=clock.now, payload=msg.payload,
+                            tenant=msg.tenant)))
+                else:                                    # Fig. 4 overlap
+                    await clock.sleep(off)
+                    await sq.put((msg.seq, _Msg(
+                        msg.idx, p, ready_at=clock.now,
+                        data_done=clock.now, payload=msg.payload,
+                        tenant=msg.tenant)))
+                    await clock.sleep(comp - off)
+                    await clock.sleep_until(data_done)
+
+        async def sequencer(k: int, sq: HopQueue, qout: HopQueue, m: int):
+            # restore admission order toward the serial hop link: buffer
+            # out-of-order releases, forward strictly by seq (a terminal
+            # release — (seq, None) — just advances the cursor); the
+            # forward instant is therefore the running max of release
+            # instants, the expression the simulator's sequencer stage
+            # computes
+            buf: dict = {}
+            next_seq = 0
+            stops = 0
+            while True:
+                item = await sq.get()
+                if item is _STOP:
+                    stops += 1
+                    if stops == m:
+                        assert not buf, "sequencer stopped with buffered " \
+                            "tasks (replica lost a release)"
+                        await qout.put(_STOP)
+                        return
+                    continue
+                s_id, out = item
+                buf[s_id] = out
+                while next_seq in buf:
+                    nxt = buf.pop(next_seq)
+                    next_seq += 1
+                    if nxt is not None:
+                        await qout.put(nxt)
+
+        async def link_worker(k: int, qin: HopQueue, qout: HopQueue):
+            link = self.links[k] if k < len(self.links) else None
+            while True:
+                msg = await qin.get()
+                if msg is _STOP:
+                    await qout.put(_STOP)
+                    return
+                await clock.sleep_until(msg.ready_at)    # tx_ready
+                t_start = clock.now
+                dur = msg.plan.tx[k]
+                if link is not None and link.trace is not None and dur > 0:
+                    bits = dur * link.bandwidth_bps
+                    dur = link.transfer_time(bits, t_start)
+                t_done = t_start + dur
+                roff = msg.plan.rx_offset[k]
+                c_ready = t_done if roff is None \
+                    else max(t_start + roff, msg.ready_at)
+                link_busy[k] += dur
+                link_iv[k].append((t_start, t_done))
+                fwd = min(max(c_ready - t_start, 0.0), dur)
+                await clock.sleep(fwd)
+                await qout.put(_Msg(msg.idx, msg.plan, ready_at=c_ready,
+                                    data_done=t_done, payload=msg.payload,
+                                    tenant=msg.tenant))
+                await clock.sleep(dur - fwd)
+
+        async def main():
+            # per tier: pool input queue -> dispatcher -> replica queues
+            # -> replicas -> sequencer -> hop link -> next pool input
+            pin = [HopQueue(clock, self.capacity) for _ in range(n_seg)]
+            workers = [clock.spawn(admit_fn(pin[0], credits, record)
+                                   if admit_fn is not None
+                                   else admit(pin[0]))]
+            for k in range(n_seg):
+                m = pools[k].m
+                rqs = [HopQueue(clock, self.capacity) for _ in range(m)]
+                sq = HopQueue(clock) if k < n_hops else None
+                workers.append(clock.spawn(dispatcher(k, pin[k], rqs)))
+                for r in range(m):
+                    workers.append(clock.spawn(
+                        replica_worker(k, r, rqs[r], sq)))
+                if k < n_hops:
+                    lq = HopQueue(clock, self.capacity)
+                    workers.append(clock.spawn(sequencer(k, sq, lq, m)))
+                    workers.append(clock.spawn(
+                        link_worker(k, lq, pin[k + 1])))
+            await asyncio.gather(*workers)
+
+        self.clock.run(main())
+        return sim.PoolStreamResult(
+            arrivals=arrs, done=done,
+            early_exit=[eh is not None for eh in exit_hops],
+            exit_hop=exit_hops,
+            makespan=max(done) - min(arrs),
+            link_busy=tuple(link_busy),
+            link_intervals=tuple(tuple(iv) for iv in link_iv),
+            replica_busy=tuple(tuple(rb) for rb in replica_busy),
+            replica_intervals=tuple(tuple(tuple(iv) for iv in tier)
+                                    for tier in replica_iv),
+            replica_batch_sizes=tuple(tuple(tuple(bs) for bs in tier)
+                                      for tier in replica_bs),
+            routes=tuple(tuple(rt) for rt in routes),
+            pools=pools)
+
 
 def run_pipeline_async(plans: Sequence[TaskPlan],
                        arrivals: Optional[Sequence[float]] = None,
@@ -583,14 +879,16 @@ def run_pipeline_async(plans: Sequence[TaskPlan],
                        clock=None,
                        segment_fn=None,
                        payloads: Optional[Sequence[Any]] = None,
-                       batch_caps: Optional[Sequence[int]] = None
-                       ) -> PipelineResult:
+                       batch_caps: Optional[Sequence[int]] = None,
+                       pools=None, router=None) -> PipelineResult:
     """Async-executor counterpart of ``core.pipeline.run_pipeline``: same
     plan normalization and result type, but the stream is *executed* by
     per-resource workers instead of replayed by ``simulate_stream``.
     With ``queue_capacity = 0`` (unbounded) and a ``VirtualClock`` the
     two timelines agree to float precision (including per-tier
-    micro-batching via ``batch_caps``)."""
+    micro-batching via ``batch_caps``).  ``pools`` + ``router`` spawn one
+    worker per replica behind per-pool dispatchers and pin against
+    ``sim.simulate_pool_stream`` instead."""
     n = len(plans)
     if arrivals is None:
         arrivals = [i * arrival_period for i in range(n)]
@@ -601,8 +899,12 @@ def run_pipeline_async(plans: Sequence[TaskPlan],
     pipe = AsyncHopPipeline(n_hops, links=links, clock=clock,
                             queue_capacity=queue_capacity,
                             segment_fn=segment_fn,
-                            batch_caps=batch_caps)
+                            batch_caps=batch_caps,
+                            pools=pools, router=router)
     res = pipe.run(lambda i, _arr: sps[i], n, arrivals, payloads=payloads)
+    if isinstance(res, sim.PoolStreamResult):
+        from repro.core.pipeline import result_from_pool_stream
+        return result_from_pool_stream(res)
     return result_from_stream(res)
 
 
@@ -632,8 +934,13 @@ class AsyncCoachEngine(EngineBase):
 
         pipe = AsyncHopPipeline(n_hops, links=self.links, clock=clock,
                                 queue_capacity=self.cfg.queue_capacity,
-                                batch_caps=self.batch_caps)
+                                batch_caps=self.batch_caps,
+                                pools=self.pools, router=self.make_router())
         res = pipe.run(admit, n, [i * arrival_period for i in range(n)])
-        pr = result_from_stream(res)
+        if isinstance(res, sim.PoolStreamResult):
+            from repro.core.pipeline import result_from_pool_stream
+            pr = result_from_pool_stream(res)
+        else:
+            pr = result_from_stream(res)
         return self._stats(pr, n, acc["exits"], acc["bits"], acc["wire"],
                            acc["correct"])

@@ -19,6 +19,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import online as ON
+from repro.core import sim
 from repro.core.costs import DeviceProfile, LinkProfile
 from repro.core.pipeline import PipelineResult, TaskPlan
 from repro.core.schedule import StageTimes
@@ -42,6 +43,17 @@ class EngineConfig:
     #                                also the auto-finder's SLO slack
     auto_batch: bool = False       # run the batch-size finder at build
     batch_cap_limit: int = 32      # auto-finder search ceiling
+    ingress_cap: Optional[int] = None  # clamp tier-0 cap (MT engines: 1);
+    #                                the auto finder redistributes a
+    #                                hard-clamped tier's slack downstream
+    # ---- replicated tiers (pool of replicas per tier + router policy;
+    #      see core.sim.PoolSpec / serving.routing)
+    pool_sizes: Optional[Sequence[int]] = None  # replicas per tier
+    pool_speeds: Optional[Sequence[Sequence[float]]] = None  # per-replica
+    #                                service-time multipliers (overrides
+    #                                pool_sizes when both are given)
+    router: str = "jsq"            # routing policy name (serving.routing)
+    router_seed: int = 0           # seed for the router's RNG streams
 
 
 @dataclasses.dataclass
@@ -156,7 +168,31 @@ class EngineBase:
             from repro.serving.batching import auto_batch_caps
             self.batch_caps = auto_batch_caps(
                 stage_compute, self.batch_fixed, self.batch_slack,
-                cfg.batch_cap_limit)
+                cfg.batch_cap_limit, ingress_cap=cfg.ingress_cap)
+        elif cfg.ingress_cap is not None and self.batch_caps:
+            self.batch_caps[0] = min(self.batch_caps[0],
+                                     int(cfg.ingress_cap))
+        # ---- replicated tiers: per-tier replica pools from config
+        # (None = the classic single-replica chain).  The engines hand
+        # these to the executors together with a serving.routing router.
+        if cfg.pool_speeds is not None:
+            self.pools: Optional[Tuple[sim.PoolSpec, ...]] = sim.as_pools(
+                [tuple(float(s) for s in sp) for sp in cfg.pool_speeds],
+                len(stage_compute))
+        elif cfg.pool_sizes is not None:
+            self.pools = sim.as_pools(
+                [int(m) for m in cfg.pool_sizes], len(stage_compute))
+        else:
+            self.pools = None
+
+    def make_router(self):
+        """Fresh router instance from the config (None when the engine
+        runs the classic chain).  Fresh per call: router state is a replay
+        log, so two runs must never share one instance."""
+        if self.pools is None:
+            return None
+        from repro.serving.routing import make_router
+        return make_router(self.cfg.router, seed=self.cfg.router_seed)
 
     # ------------------------------------------------------------ decisions
     @staticmethod

@@ -72,12 +72,25 @@ def auto_batch_caps(compute: Sequence[float], t_fixed: Sequence[float],
     inside it.  ``ingress_cap`` clamps tier 0 (the multi-tenant engines
     force it to 1 — credit-gated admission keeps the ingress queue at
     depth <= 1, so batching there is meaningless).
+
+    A tier clamped to cap <= 1 can never *spend* staleness slack —
+    batching is off there — so it is excluded from the even split and
+    its share is redistributed over the tiers that can batch (giving a
+    hard-clamped ingress a full ``1/n`` share would silently waste it;
+    downstream caps under the redistribution are always >= the naive
+    even-split caps, since ``find_batch_cap`` is monotone in its budget).
     """
     n_seg = len(compute)
     assert len(t_fixed) == n_seg
-    per_tier = max(0.0, slack) / n_seg
+    clamped = [ingress_cap is not None and int(ingress_cap) <= 1 and k == 0
+               for k in range(n_seg)]
+    n_eligible = sum(1 for c in clamped if not c)
+    per_tier = max(0.0, slack) / n_eligible if n_eligible else 0.0
     caps = []
     for k in range(n_seg):
+        if clamped[k]:
+            caps.append(1)
+            continue
         marginal = compute[k] - t_fixed[k]
         caps.append(find_batch_cap(
             lambda n, f=t_fixed[k], m=marginal: f + n * m,

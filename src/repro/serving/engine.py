@@ -58,6 +58,7 @@ class CoachEngine(EngineBase):
             plans.append(plan)
             self.account(dec, feats, pred, task, wire_bits, acc)
         pr = run_pipeline(plans, arrival_period=arrival_period,
-                          links=self.links, batch_caps=self.batch_caps)
+                          links=self.links, batch_caps=self.batch_caps,
+                          pools=self.pools, router=self.make_router())
         return self._stats(pr, len(tasks), acc["exits"], acc["bits"],
                            acc["wire"], acc["correct"])

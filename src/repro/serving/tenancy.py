@@ -54,6 +54,7 @@ import numpy as np
 
 from repro.core import sim
 from repro.core.pipeline import (PipelineResult, TaskPlan, TaskRecord,
+                                 result_from_pool_stream,
                                  result_from_stream)
 from repro.serving.async_engine import (AsyncHopPipeline, HopQueue,
                                         VirtualClock, _Msg, _STOP)
@@ -250,18 +251,24 @@ class MultiTenantHopPipeline:
                  queue_capacity: int = 0, segment_fn=None,
                  policy: AdmissionPolicy | str = "fifo",
                  weights: Optional[Sequence[float]] = None,
-                 batch_caps: Optional[Sequence[int]] = None):
+                 batch_caps: Optional[Sequence[int]] = None,
+                 pools=None, router=None):
         # tier 0 never batches under multi-tenancy: admission is credit-
         # gated one task at a time, so the ingress queue holds at most
         # one task and a tier-0 drain would diverge from the admission
         # gate (``sim.simulate_multitenant_stream`` applies the same
-        # clamp to stay pinned)
+        # clamp to stay pinned).  With ``pools=`` the ingress credit
+        # generalizes to *pool* ingress — every tier-0 replica issues a
+        # credit when it frees, so up to ``m`` tasks are admitted into
+        # the ingress pool at once (``sim.multitenant_pool_admission``
+        # computes the same gate as a min-heap of completion instants)
         if batch_caps is not None:
             batch_caps = [1] + [int(c) for c in batch_caps[1:]]
         self.pipe = AsyncHopPipeline(n_hops, links=links, clock=clock,
                                      queue_capacity=queue_capacity,
                                      segment_fn=segment_fn,
-                                     batch_caps=batch_caps)
+                                     batch_caps=batch_caps,
+                                     pools=pools, router=router)
         self.policy = make_policy(policy, weights=weights)
 
     @property
@@ -336,7 +343,7 @@ class MultiTenantHopPipeline:
                     order.append((t, i))
                     record(idx, arr)
                     await q0.put(_Msg(idx, plan, ready_at=arr, data_done=arr,
-                                      payload=payload))
+                                      payload=payload, tenant=t))
                 await q0.put(_STOP)
 
             # children are clock-spawned workers; completion (and error
@@ -362,6 +369,10 @@ class MultiTenantHopPipeline:
                 raise errs[0]
 
         res = self.pipe.run(None, total, None, admit_fn=admit_fn)
+        if isinstance(res, sim.PoolStreamResult):
+            return sim.MultiTenantPoolStreamResult(
+                stream=res.as_stream_result(), order=tuple(order),
+                n_tenants=n_t, pool=res)
         return sim.MultiTenantStreamResult(stream=res, order=tuple(order),
                                            n_tenants=n_t)
 
@@ -372,9 +383,11 @@ def run_multitenant_async(plans_by_tenant: Sequence[Sequence[TaskPlan]],
                           weights: Optional[Sequence[float]] = None,
                           links=None, queue_capacity: int = 0, clock=None,
                           segment_fn=None, payloads=None,
-                          batch_caps: Optional[Sequence[int]] = None
+                          batch_caps: Optional[Sequence[int]] = None,
+                          pools=None, router=None
                           ) -> sim.MultiTenantStreamResult:
-    """Async-executor counterpart of ``sim.simulate_multitenant_stream``:
+    """Async-executor counterpart of ``sim.simulate_multitenant_stream``
+    (or, with ``pools=``, of ``sim.simulate_multitenant_pool_stream``):
     same plan normalization, same result type, but the merged stream is
     *executed* by per-resource workers behind a policy dispatcher.  With
     unbounded queues and a ``VirtualClock`` the two admission orders and
@@ -388,7 +401,8 @@ def run_multitenant_async(plans_by_tenant: Sequence[Sequence[TaskPlan]],
     pipe = MultiTenantHopPipeline(n_hops, links=links, clock=clock,
                                   queue_capacity=queue_capacity,
                                   segment_fn=segment_fn, policy=policy,
-                                  weights=weights, batch_caps=batch_caps)
+                                  weights=weights, batch_caps=batch_caps,
+                                  pools=pools, router=router)
     plan_fns = [(lambda t: lambda i, _arr: sps[t][i])(t)
                 for t in range(len(sps))]
     return pipe.run(plan_fns, arrivals_by_tenant, payloads=payloads)
@@ -538,11 +552,14 @@ class MultiTenantCoachEngine:
         # one private engine state per tenant (fresh config copy each, so
         # a tenant-level config edit can never leak across tenants; each
         # tenant also calibrates its own hop probes from hop_calib, so
-        # hop-level exit decisions stay tenant-isolated)
+        # hop-level exit decisions stay tenant-isolated).  Credit-gated
+        # admission holds the ingress queue at depth <= 1, so tier 0 can
+        # never batch: pin ingress_cap = 1 so the auto batch-size finder
+        # redistributes tier 0's slack share to tiers that can use it.
         self.engines: List[EngineBase] = [
             EngineBase(runtime, stage_times, end_dev, link, cloud_dev,
                        n_labels, calib_feats, calib_labels,
-                       cfg=dataclasses.replace(self.cfg),
+                       cfg=dataclasses.replace(self.cfg, ingress_cap=1),
                        boundary_elems=boundary_elems, links=links,
                        hop_bits_offline=hop_bits_offline,
                        hop_calib=hop_calib)
@@ -551,6 +568,10 @@ class MultiTenantCoachEngine:
         # caps are config-derived, so every per-tenant engine agrees;
         # the pipeline clamps tier 0 to cap 1 (credit-gated ingress)
         self.batch_caps = self.engines[0].batch_caps
+        # replicated tiers: one shared pool topology for the chain (the
+        # tenants share the replicas; the router may still pin a tenant
+        # to a replica via the "affinity" policy)
+        self.pools = self.engines[0].pools
         self.policy = make_policy(policy,
                                   weights=[t.weight for t in self.tenants])
 
@@ -602,7 +623,8 @@ class MultiTenantCoachEngine:
         pipe = MultiTenantHopPipeline(
             n_hops, links=self.links, clock=clock,
             queue_capacity=self.cfg.queue_capacity, policy=self.policy,
-            batch_caps=self.batch_caps)
+            batch_caps=self.batch_caps, pools=self.pools,
+            router=self.engines[0].make_router())
         mt = pipe.run([tenant_plan_fn(t) for t in range(n_t)], arrivals)
 
         reports = []
@@ -618,8 +640,13 @@ class MultiTenantCoachEngine:
                                      for rec in pr.tasks]))
             reports.append(TenantReport(spec=spec, stats=stats,
                                         slo_attainment=slo))
+        if isinstance(mt, sim.MultiTenantPoolStreamResult) \
+                and mt.pool is not None:
+            merged = result_from_pool_stream(mt.pool)
+        else:
+            merged = result_from_stream(mt.stream)
         return MultiTenantStats(
-            pipeline=result_from_stream(mt.stream), order=mt.order,
+            pipeline=merged, order=mt.order,
             reports=reports, policy=self.policy.name,
             plans=[accs[t]["plans"] for t in range(n_t)],
             arrivals=arrivals)

@@ -19,6 +19,7 @@ if importlib.util.find_spec("hypothesis") is None:
         "test_online.py",
         "test_partitioner.py",
         "test_pipeline.py",
+        "test_pool_props.py",
         "test_quant.py",
         "test_ssm.py",
         "test_tenancy_props.py",

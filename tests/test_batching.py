@@ -427,12 +427,40 @@ def test_auto_batch_caps_per_tier_split_and_ingress_clamp():
     # marginal) can't batch at all
     caps = auto_batch_caps(compute, fixed, slack=6.1e-3, cap_limit=32)
     assert caps == [6, 6, 1]
+    # a hard ingress clamp (cap <= 1) excludes tier 0 from the split:
+    # its unusable 1/3 share is redistributed, so tier 1's budget grows
+    # from ~2.03 ms to ~3.05 ms (-> 8 members at 0.4 ms marginal).  The
+    # former even split silently wasted the clamped share ([1, 6, 1]).
     caps = auto_batch_caps(compute, fixed, slack=6.1e-3, cap_limit=32,
                            ingress_cap=1)
-    assert caps == [1, 6, 1]
+    assert caps == [1, 8, 1]
     # zero / negative slack: unbatched everywhere
     assert auto_batch_caps(compute, fixed, slack=0.0) == [1, 1, 1]
     assert auto_batch_caps(compute, fixed, slack=-1.0) == [1, 1, 1]
+
+
+def test_auto_batch_caps_redistribution_is_monotone_downstream():
+    """Excluding a clamped ingress from the split can only grow the
+    downstream tiers' budgets: every unclamped cap under ``ingress_cap=1``
+    is >= its naive even-split counterpart (``find_batch_cap`` is
+    monotone in its slack budget)."""
+    rng = np.random.RandomState(7)
+    for _ in range(50):
+        n_seg = int(rng.randint(2, 6))
+        compute = rng.uniform(1e-3, 6e-3, n_seg)
+        fixed = compute * rng.uniform(0.0, 0.95, n_seg)
+        slack = float(rng.uniform(0.0, 20e-3))
+        naive = auto_batch_caps(list(compute), list(fixed), slack)
+        redis = auto_batch_caps(list(compute), list(fixed), slack,
+                                ingress_cap=1)
+        assert redis[0] == 1
+        for k in range(1, n_seg):
+            assert redis[k] >= naive[k]
+    # ingress_cap > 1 still clamps but does NOT exclude tier 0 from the
+    # split (it can spend some slack), so downstream caps are unchanged
+    compute, fixed = [4e-3, 4e-3, 4e-3], [3.6e-3, 3.6e-3, 0.0]
+    assert auto_batch_caps(compute, fixed, slack=6.1e-3,
+                           ingress_cap=2) == [2, 6, 1]
 
 
 # ------------------------------------------------------- engine level
