@@ -22,6 +22,8 @@ from repro.core.partitioner import coach_offline
 from repro.core.pipeline import TaskPlan, run_pipeline
 from repro.core.schedule import StageTimes
 from repro.data.pipeline import CorrelatedTaskStream, make_calibration_set
+from repro.obs.bubbles import attribute, chain_resources
+from repro.obs.trace import TraceRecorder
 
 DEVICES = {"NX": JETSON_NX, "TX2": JETSON_TX2}
 N_LABELS = 30
@@ -39,6 +41,11 @@ class RunResult:
     cloud_bubbles: float
     link_bubbles: float
     max_stage_ms: float
+    # full per-resource, per-cause idle decomposition from obs.bubbles
+    # ({label: {cause: seconds}}, zero causes pruned); the scalar
+    # cloud_bubbles/link_bubbles keys above stay for schema compatibility
+    bubble_causes: Dict[str, Dict[str, float]] = \
+        dataclasses.field(default_factory=dict)
 
 
 def _boundary_elems(graph: ModelGraph, end_set) -> int:
@@ -70,7 +77,13 @@ def _proxy_classifier(stream, quant_bits: Optional[int] = None):
 
 
 def _pipeline_result(plans, correct, arrival_period, link, exits) -> RunResult:
-    pr = run_pipeline(plans, arrival_period=arrival_period, link=link)
+    rec = TraceRecorder()
+    pr = run_pipeline(plans, arrival_period=arrival_period, link=link,
+                      sink=rec)
+    att = attribute(rec, resources=chain_resources(
+        pr.n_hops, pr.pool_sizes or None))
+    causes = {label: {c: s for c, s in cs.items() if s > 0.0}
+              for label, cs in att.by_label().items()}
     tx = [p.t_tx for p in plans if not p.early_exit]
     return RunResult(
         mean_latency_ms=pr.mean_latency * 1e3,
@@ -83,6 +96,7 @@ def _pipeline_result(plans, correct, arrival_period, link, exits) -> RunResult:
         cloud_bubbles=pr.bubble_fraction("cloud"),
         link_bubbles=pr.bubble_fraction("link"),
         max_stage_ms=max(max(p.t_end, p.t_tx, p.t_cloud) for p in plans) * 1e3,
+        bubble_causes=causes,
     )
 
 

@@ -13,10 +13,11 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-from benchmarks import (ablation, arch_partition, batching, fig1_locality,
-                        fig2_schemes, fig5_dynamic, fig6_fig7_bandwidth,
-                        kernels_bench, multihop, multitenant, planner,
-                        roofline, routing, table1_latency, table2_context)
+from benchmarks import (ablation, arch_partition, batching, bubbles,
+                        fig1_locality, fig2_schemes, fig5_dynamic,
+                        fig6_fig7_bandwidth, kernels_bench, multihop,
+                        multitenant, planner, roofline, routing,
+                        table1_latency, table2_context)
 
 MODULES = {
     "fig1": fig1_locality,
@@ -35,6 +36,7 @@ MODULES = {
     "planner": planner,          # offline-search candidate throughput
     "batching": batching,        # micro-batched vs unbatched paired rows
     "routing": routing,          # replicated-tier throughput-vs-m sweeps
+    "bubbles": bubbles,          # per-cause idle attribution, pinned+gated
     "roofline": roofline,
 }
 

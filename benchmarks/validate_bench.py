@@ -48,6 +48,15 @@ informed policies only: for jsq and po2 the ``m = 2`` row must deliver
 >= 1.8x the ``m = 1`` throughput at equal-or-better p99 (random is the
 no-information baseline and is reported ungated).
 
+``kind = "bubbles"``: per-cause idle-attribution rows
+(``benchmarks/bubbles.py``) — every (model, hops, config) cell carries
+BOTH engines with matched span traces (``trace_match``), a per-resource
+``busy_ms`` / ``bubble_causes_ms`` decomposition over the closed cause
+set, and the conservation identity re-checked *from the row payload
+alone*: ``busy + sum(causes) == horizon`` per resource.  Async rows
+additionally carry ``trace_overhead_pct``, gated < 5% (the cost of
+running the executor with a live recorder vs tracing disabled).
+
 Rows of the engine-bearing kinds missing an explicit ``engine`` are
 rejected outright (planner rows describe the search, not an executor,
 and carry no engine).
@@ -88,6 +97,18 @@ BATCH_P99_TOL = 1 + 1e-9
 ROUTING_SPEEDUP_MIN = 1.8
 #: ...again at equal-or-better p99
 ROUTING_P99_TOL = 1 + 1e-9
+#: enabled-tracing wall overhead gate on async bubbles rows, percent
+BUBBLE_OVERHEAD_MAX = 5.0
+#: the attribution engine's own conservation residual bound (seconds)
+BUBBLE_CONS_TOL_S = 1e-9
+#: the closed cause enum of ``repro.obs.bubbles`` (duplicated here so
+#: the validator stays dependency-free)
+BUBBLE_CAUSES = {
+    "warmup", "drain", "upstream_starvation", "downstream_backpressure",
+    "batch_formation", "sequencer_reorder", "ingress_credit",
+    "exit_released",
+}
+BUBBLE_CONFIGS = {"chain", "exits", "pool"}
 ENGINES = {"sim", "async"}
 POLICIES = {"fifo", "rr", "wdrr"}
 ROUTER_POLICIES = {"jsq", "po2", "random"}
@@ -196,6 +217,57 @@ def _check_routing(i: int, row: dict) -> None:
     assert max(sizes) == m, f"row {i}: m must match pool_sizes"
 
 
+def _check_bubbles(i: int, row: dict) -> None:
+    assert isinstance(row.get("model"), str) and row["model"], f"row {i}"
+    assert isinstance(row.get("hops"), int) and row["hops"] >= 2, \
+        f"row {i}: bad hops"
+    assert row.get("engine") in ENGINES, \
+        f"row {i}: engine must be one of {sorted(ENGINES)}"
+    assert row.get("config") in BUBBLE_CONFIGS, \
+        f"row {i}: config must be one of {sorted(BUBBLE_CONFIGS)}"
+    sizes = row.get("pool_sizes")
+    assert isinstance(sizes, list) and len(sizes) == row["hops"] and all(
+        isinstance(v, int) and v >= 1 for v in sizes), \
+        f"row {i}: pool_sizes must list {row['hops']} replica counts >= 1"
+    _check_numeric(i, row, ("makespan_ms", "horizon_ms"))
+    busy = row.get("busy_ms")
+    n_resources = sum(sizes) + row["hops"] - 1
+    assert isinstance(busy, dict) and len(busy) == n_resources and all(
+        isinstance(v, (int, float)) and v >= 0 for v in busy.values()), \
+        f"row {i}: busy_ms must cover all {n_resources} resources"
+    causes = row.get("bubble_causes_ms")
+    assert isinstance(causes, dict) and set(causes) <= set(busy), \
+        f"row {i}: bubble_causes_ms labels must be busy_ms labels"
+    for label, cs in causes.items():
+        assert isinstance(cs, dict) and set(cs) <= BUBBLE_CAUSES, \
+            f"row {i}: unknown bubble cause in {label}: " \
+            f"{sorted(set(cs) - BUBBLE_CAUSES)}"
+        assert all(isinstance(v, (int, float)) and v > 0
+                   for v in cs.values()), \
+            f"row {i}: non-positive cause seconds in {label}"
+    # conservation, re-derived from the payload alone: busy + attributed
+    # bubbles must tile the horizon on every resource
+    h = row["horizon_ms"]
+    for label in busy:
+        total = busy[label] + sum(causes.get(label, {}).values())
+        assert abs(total - h) <= 1e-5 + 1e-9 * abs(h), \
+            f"row {i}: conservation broken on {label}: " \
+            f"busy+bubbles={total!r} horizon={h!r}"
+    err = row.get("conservation_max_err_s")
+    assert isinstance(err, (int, float)) and 0 <= err <= BUBBLE_CONS_TOL_S, \
+        f"row {i}: conservation_max_err_s {err!r} > {BUBBLE_CONS_TOL_S}"
+    assert isinstance(row.get("n_spans"), int) and row["n_spans"] > 0, \
+        f"row {i}: bad n_spans"
+    assert row.get("trace_match") is True, \
+        f"row {i}: trace_match must be true (sim/async span pin)"
+    if row["engine"] == "async":
+        ov = row.get("trace_overhead_pct")
+        assert isinstance(ov, (int, float)) and \
+            0 <= ov <= BUBBLE_OVERHEAD_MAX, \
+            f"row {i}: trace_overhead_pct {ov!r} outside " \
+            f"[0, {BUBBLE_OVERHEAD_MAX}]"
+
+
 def _check_routing_sweeps(rows: dict) -> None:
     """The scale-out gate: for the informed policies, m = 2 must deliver
     >= 1.8x the m = 1 throughput at equal-or-better p99, per
@@ -240,6 +312,7 @@ def validate(path: Path) -> list:
     data = json.loads(path.read_text())
     assert isinstance(data, list) and data, "payload must be a non-empty list"
     mh_seen, mt_seen, bt_seen, rt_seen = set(), set(), set(), set()
+    bb_seen = set()
     mh_exit = {}
     mt_runs = {}
     bt_pairs = {}
@@ -248,9 +321,14 @@ def validate(path: Path) -> list:
         assert isinstance(row, dict), f"row {i}: not an object"
         kind = row.get("kind", "multihop")
         assert kind in ("multihop", "multitenant", "planner", "batching",
-                        "routing"), f"row {i}: kind {kind!r}"
+                        "routing", "bubbles"), f"row {i}: kind {kind!r}"
         if kind == "planner":
             _check_planner(i, row)
+            continue
+        if kind == "bubbles":
+            _check_bubbles(i, row)
+            bb_seen.add((row["model"], row["hops"], row["config"],
+                         row["engine"]))
             continue
         _check_common(i, row)
         if kind == "routing":
@@ -311,6 +389,8 @@ def validate(path: Path) -> list:
     if rt_seen:
         _require_both_engines(rt_seen, "routing")
         _check_routing_sweeps(rt_sweeps)
+    if bb_seen:
+        _require_both_engines(bb_seen, "bubbles")
     return data
 
 

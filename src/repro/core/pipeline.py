@@ -193,7 +193,19 @@ class PipelineResult:
     def _capacity(self, stage: Union[str, Tuple[str, int]]) -> float:
         """Busy-time capacity of a resource over the run: ``makespan``
         for a serial resource, ``m * makespan`` for a replicated compute
-        tier (so ``bubble_fraction`` stays in ``[0, 1]`` with pools)."""
+        tier, ``n_hops * makespan`` for the aggregate ``"link"`` view
+        (``link_busy`` sums every hop) — so ``bubble_fraction`` stays in
+        ``[0, 1]`` with pools and with multi-hop chains alike.
+
+        Replica *speeds* need no extra normalization: busy time is
+        measured in wall seconds on each replica (a slow replica is busy
+        longer for the same task), so ``m * makespan`` is the correct
+        wall-clock capacity of a heterogeneous pool too.  This matches
+        the per-resource conservation identity of
+        ``repro.obs.bubbles.attribute`` — ``sum_r busy_r + sum_r
+        bubbles_r = m * horizon`` per tier."""
+        if stage == "link":
+            return self.n_hops * self.makespan
         if not self.pool_sizes:
             return self.makespan
         if isinstance(stage, tuple):
@@ -263,7 +275,7 @@ def run_pipeline(plans: Sequence[TaskPlan],
                  links: Optional[Sequence[Optional[LinkProfile]]] = None,
                  batch_caps: Optional[Sequence[int]] = None,
                  pools: Optional[Sequence] = None,
-                 router=None) -> PipelineResult:
+                 router=None, sink=None) -> PipelineResult:
     """Execute the task stream.  ``link`` (classic) or ``links`` (one per
     hop) with a bandwidth trace re-integrates each task's transmission
     time at its actual start time (dynamic networks, Fig. 5).
@@ -271,7 +283,10 @@ def run_pipeline(plans: Sequence[TaskPlan],
     ``sim.simulate_stream``).  ``pools`` (per-tier replica pools, see
     ``sim.PoolSpec``) with a ``router`` (``serving.routing`` policy,
     duck-typed here so the core stays serving-free) runs the replicated
-    DAG path instead of the serial chain."""
+    DAG path instead of the serial chain.  ``sink`` (a
+    ``repro.obs.trace`` span sink) records the timeline as spans; the
+    async executor emits the same spans, so traces are differentially
+    pinned like results."""
     n = len(plans)
     if arrivals is None:
         arrivals = [i * arrival_period for i in range(n)]
@@ -285,10 +300,11 @@ def run_pipeline(plans: Sequence[TaskPlan],
     if pools is not None:
         assert router is not None, "replicated tiers need a router policy"
         pres = sim.simulate_pool_stream(sim_plans, arrivals, pools, router,
-                                        links=links, batch_caps=batch_caps)
+                                        links=links, batch_caps=batch_caps,
+                                        sink=sink)
         return result_from_pool_stream(pres)
     res = sim.simulate_stream(sim_plans, arrivals, links=links,
-                              batch_caps=batch_caps)
+                              batch_caps=batch_caps, sink=sink)
     return result_from_stream(res)
 
 

@@ -84,6 +84,8 @@ import heapq
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.costs import DeviceProfile, LinkProfile, ModelGraph
+from repro.obs.trace import (BATCH_FORM, CREDIT_WAIT, ENQUEUE, EXIT_RELEASE,
+                             ROUTE, SEQ_HOLD, SERVICE, XFER, Span)
 
 Edge = Tuple[int, int]
 Interval = Tuple[float, float]
@@ -469,7 +471,9 @@ class StreamResult:
 def simulate_stream(plans: Sequence[SimPlan],
                     arrivals: Sequence[float],
                     links: Optional[Sequence[Optional[LinkProfile]]] = None,
-                    batch_caps: Optional[Sequence[int]] = None
+                    batch_caps: Optional[Sequence[int]] = None,
+                    sink=None,
+                    ingress_enqueues: Optional[Sequence[float]] = None
                     ) -> StreamResult:
     """Replay a task stream over the ``2n+1`` serial resources.
 
@@ -487,10 +491,22 @@ def simulate_stream(plans: Sequence[SimPlan],
     at its wake instant into one batch, bounded by the cap and by the
     members' staleness deadlines (``greedy_batch_size``), and the tier
     is occupied once for ``batched_service_time``.  ``None`` — or caps
-    of all ones — replays the classic one-task-per-slot timeline."""
+    of all ones — replays the classic one-task-per-slot timeline.
+
+    ``sink`` is an optional trace sink (``repro.obs.trace``): when set,
+    every enqueue/service/transfer/exit event is emitted as a span with
+    exactly the instants of this timeline — the async executor emits the
+    same spans, so traces are differentially pinned like results.  Every
+    emission is guarded by ``sink is not None`` (zero cost disabled).
+    ``ingress_enqueues[i]`` overrides the *reported* tier-0 enqueue
+    instant of task ``i`` (the multi-tenant gate dispatches at ``t_d >=
+    arrival``; the chain timeline is unaffected because the credit gate
+    never delays a task past ``max(arrival, free_0)``)."""
     assert plans, "empty stream"
     if batch_caps is not None and any(c > 1 for c in batch_caps):
-        return _simulate_stream_batched(plans, arrivals, links, batch_caps)
+        return _simulate_stream_batched(plans, arrivals, links, batch_caps,
+                                        sink=sink,
+                                        ingress_enqueues=ingress_enqueues)
     n_hops = len(plans[0].tx)
     n_seg = n_hops + 1
     compute_free = [0.0] * n_seg
@@ -502,7 +518,8 @@ def simulate_stream(plans: Sequence[SimPlan],
     done: List[float] = []
     exits: List[bool] = []
     exit_hops: List[Optional[int]] = []
-    for p, arr in zip(plans, arrivals):
+    enq_acc = 0.0
+    for i, (p, arr) in enumerate(zip(plans, arrivals)):
         assert len(p.tx) == n_hops, "mixed hop counts in one stream"
         e = p.exit_hop if p.exit_hop is not None else n_hops
         s = max(arr, compute_free[0])
@@ -512,8 +529,18 @@ def simulate_stream(plans: Sequence[SimPlan],
         compute_iv[0].append((s, d))
         exits.append(p.exit_hop is not None)
         exit_hops.append(p.exit_hop)
+        if sink is not None:
+            enq_acc = arr if arr > enq_acc else enq_acc
+            e0 = ingress_enqueues[i] if ingress_enqueues is not None \
+                else enq_acc
+            sink.span(Span(ENQUEUE, ("compute", 0), e0, e0, task=i))
+            sink.span(Span(SERVICE, ("compute", 0, 0), s, d, task=i,
+                           tasks=(i,), ready=arr, batch=1))
         if e == 0:
             done.append(d)
+            if sink is not None:
+                sink.span(Span(EXIT_RELEASE, ("compute", 0, 0), d, d,
+                               task=i, hop=0))
             continue
         prev_start, prev_done = s, d
         for k in range(e):
@@ -540,8 +567,21 @@ def simulate_stream(plans: Sequence[SimPlan],
             compute_free[k + 1] = c_done
             compute_busy[k + 1] += p.compute[k + 1]
             compute_iv[k + 1].append((c_start, c_start + p.compute[k + 1]))
+            if sink is not None:
+                sink.span(Span(XFER, ("link", k), t_start, t_done,
+                               task=i, ready=tx_ready))
+                # next-tier enqueue = the executor link worker's put
+                # instant (partial-forward under an rx offset)
+                tq = t_start + min(max(c_ready - t_start, 0.0), t_dur)
+                sink.span(Span(ENQUEUE, ("compute", k + 1), tq, tq, task=i))
+                sink.span(Span(SERVICE, ("compute", k + 1, 0), c_start,
+                               c_start + p.compute[k + 1], task=i,
+                               tasks=(i,), ready=c_ready, batch=1))
             prev_start, prev_done = c_start, c_done
         done.append(prev_done)
+        if sink is not None and p.exit_hop is not None:
+            sink.span(Span(EXIT_RELEASE, ("compute", e, 0), prev_done,
+                           prev_done, task=i, hop=e))
     arrivals = list(arrivals[:len(done)])
     makespan = max(done) - min(arrivals)
     return StreamResult(arrivals=arrivals, done=done, early_exit=exits,
@@ -557,7 +597,9 @@ def _simulate_stream_batched(
         plans: Sequence[SimPlan],
         arrivals: Sequence[float],
         links: Optional[Sequence[Optional[LinkProfile]]],
-        batch_caps: Sequence[int]) -> StreamResult:
+        batch_caps: Sequence[int],
+        sink=None,
+        ingress_enqueues: Optional[Sequence[float]] = None) -> StreamResult:
     """Staged replay of ``simulate_stream`` with per-tier micro-batching.
 
     Tiers are replayed one at a time (tier 0, link 0, tier 1, ...) —
@@ -601,6 +643,9 @@ def _simulate_stream_batched(
     for i, arr in enumerate(arrivals):
         enq = arr if arr > enq else enq   # the admitter is serial
         pend.append((i, enq, float(arr), float(arr)))
+        if sink is not None:
+            e0 = ingress_enqueues[i] if ingress_enqueues is not None else enq
+            sink.span(Span(ENQUEUE, ("compute", 0), e0, e0, task=i))
 
     for k in range(n_seg):
         cap = caps[k]
@@ -630,11 +675,18 @@ def _simulate_stream_batched(
                 compute_busy[k] += comp
                 compute_iv[k].append((s, s + comp))
                 comp_bs[k].append(1)
+                if sink is not None:
+                    sink.span(Span(SERVICE, ("compute", k, 0), s, s + comp,
+                                   task=idx0, tasks=(idx0,), ready=ready0,
+                                   batch=1))
                 fin = max(s + comp, dd0)
                 free = fin
                 if k == n_hops or (p.exit_hop is not None
                                    and k >= p.exit_hop):
                     done[idx0] = fin
+                    if sink is not None and p.exit_hop is not None:
+                        sink.span(Span(EXIT_RELEASE, ("compute", k, 0),
+                                       fin, fin, task=idx0, hop=p.exit_hop))
                 else:
                     off = p.tx_offset[k]
                     tx_ready = fin if off is None or off >= comp else s + off
@@ -644,6 +696,15 @@ def _simulate_stream_batched(
             compute_busy[k] += dur
             compute_iv[k].append((s, s + dur))
             comp_bs[k].append(n_b)
+            if sink is not None:
+                sink.span(Span(SERVICE, ("compute", k, 0), s, s + dur,
+                               task=idx0,
+                               tasks=tuple(e[0] for e in batch),
+                               ready=ready0, batch=n_b))
+                for (idx_m, _, ready_m, _) in batch[1:]:
+                    if s > ready_m:
+                        sink.span(Span(BATCH_FORM, ("compute", k, 0),
+                                       ready_m, s, task=idx_m))
             end = s + dur
             fin = end
             for (idx_m, _, _, dd_m) in batch:
@@ -652,6 +713,9 @@ def _simulate_stream_batched(
                 if k == n_hops or (p.exit_hop is not None
                                    and k >= p.exit_hop):
                     done[idx_m] = fin
+                    if sink is not None and p.exit_hop is not None:
+                        sink.span(Span(EXIT_RELEASE, ("compute", k, 0),
+                                       fin, fin, task=idx_m, hop=p.exit_hop))
                 else:
                     nxt.append((idx_m, fin))
             free = fin
@@ -679,6 +743,11 @@ def _simulate_stream_batched(
             # expression) the executor's link worker performs its put
             fwd = min(max(c_ready - t_start, 0.0), t_dur)
             new_pend.append((idx, t_start + fwd, c_ready, t_done))
+            if sink is not None:
+                sink.span(Span(XFER, ("link", k), t_start, t_done,
+                               task=idx, ready=tx_ready))
+                sink.span(Span(ENQUEUE, ("compute", k + 1), t_start + fwd,
+                               t_start + fwd, task=idx))
         pend = new_pend
 
     arr_list = list(arrivals)
@@ -702,7 +771,9 @@ TenantSlot = Tuple[int, int]  # (tenant index, per-tenant task index)
 def multitenant_admission_order(
         plans: Sequence[Sequence[SimPlan]],
         arrivals: Sequence[Sequence[float]],
-        policy) -> List[TenantSlot]:
+        policy,
+        sink=None,
+        return_enqueues: bool = False):
     """Merge per-tenant FIFO streams into one global admission sequence.
 
     Admission is gated by the shared ingress resource (``compute_0``):
@@ -720,6 +791,12 @@ def multitenant_admission_order(
     between this arithmetic gate and the executor's event-driven ingress
     credits, so the differential harness pins the *gating semantics*,
     not the policy code).
+
+    ``sink`` emits a ``credit_wait`` span per dispatch held past its
+    task's arrival (the executor's dispatcher emits the same span at its
+    put instant).  ``return_enqueues=True`` additionally returns the
+    per-slot dispatch instants ``t_d`` (the true tier-0 enqueue times,
+    fed to ``simulate_stream(ingress_enqueues=...)`` for tracing).
     """
     n_t = len(plans)
     assert len(arrivals) == n_t
@@ -731,6 +808,7 @@ def multitenant_admission_order(
     heads = [0] * n_t
     free0 = 0.0
     order: List[TenantSlot] = []
+    enqueues: List[float] = []
     policy.reset(n_t)
     while len(order) < total:
         pend = [t for t in range(n_t) if heads[t] < len(plans[t])]
@@ -743,9 +821,13 @@ def multitenant_admission_order(
         assert t in info, f"policy picked non-candidate tenant {t}"
         i = heads[t]
         heads[t] += 1
+        if sink is not None and t_d > arrivals[t][i]:
+            sink.span(Span(CREDIT_WAIT, ("compute", 0), arrivals[t][i],
+                           t_d, task=len(order)))
         order.append((t, i))
+        enqueues.append(t_d)
         free0 = max(arrivals[t][i], free0) + plans[t][i].compute[0]
-    return order
+    return (order, enqueues) if return_enqueues else order
 
 
 @dataclasses.dataclass
@@ -794,7 +876,8 @@ def simulate_multitenant_stream(
         arrivals: Sequence[Sequence[float]],
         policy,
         links: Optional[Sequence[Optional[LinkProfile]]] = None,
-        batch_caps: Optional[Sequence[int]] = None
+        batch_caps: Optional[Sequence[int]] = None,
+        sink=None
         ) -> MultiTenantStreamResult:
     """Replay tagged multi-tenant task streams over the shared ``2n+1``
     resources: compute the policy's admission order (gated by the
@@ -808,14 +891,17 @@ def simulate_multitenant_stream(
     until ``compute_0`` frees), so the ingress queue never holds more
     than one task and batching there would diverge from the admission
     gate both engines implement."""
-    order = multitenant_admission_order(plans, arrivals, policy)
+    order, enqueues = multitenant_admission_order(plans, arrivals, policy,
+                                                  sink=sink,
+                                                  return_enqueues=True)
     assert order, "empty multi-tenant stream"
     merged_plans = [plans[t][i] for (t, i) in order]
     merged_arr = [arrivals[t][i] for (t, i) in order]
     if batch_caps is not None:
         batch_caps = [1] + [int(c) for c in batch_caps[1:]]
     res = simulate_stream(merged_plans, merged_arr, links=links,
-                          batch_caps=batch_caps)
+                          batch_caps=batch_caps, sink=sink,
+                          ingress_enqueues=enqueues)
     return MultiTenantStreamResult(stream=res, order=tuple(order),
                                    n_tenants=len(plans))
 
@@ -929,7 +1015,8 @@ def simulate_pool_stream(plans: Sequence[SimPlan],
                          links: Optional[Sequence[Optional[LinkProfile]]] = None,
                          batch_caps: Optional[Sequence[int]] = None,
                          tenants: Optional[Sequence[Optional[int]]] = None,
-                         enqueues: Optional[Sequence[float]] = None
+                         enqueues: Optional[Sequence[float]] = None,
+                         sink=None
                          ) -> PoolStreamResult:
     """Replay a task stream over a DAG of per-tier *resource pools*.
 
@@ -1002,6 +1089,8 @@ def simulate_pool_stream(plans: Sequence[SimPlan],
         else:
             enq = arr if arr > enq else enq   # the admitter is serial
         pend.append((i, enq, float(arr), float(arr)))
+        if sink is not None:
+            sink.span(Span(ENQUEUE, ("compute", 0), enq, enq, task=i))
 
     for k in range(n_seg):
         cap = caps[k]
@@ -1012,12 +1101,16 @@ def simulate_pool_stream(plans: Sequence[SimPlan],
         # makes the same calls, in the same order, on the same state)
         assign: List[List[Tuple[int, float, float, float]]] = \
             [[] for _ in range(m)]
-        for ent in pend:
+        for seq_j, ent in enumerate(pend):
             r = router.route(k, ent[2], plans[ent[0]].compute[k],
                              tenants[ent[0]])
             assert 0 <= r < m, f"router placed task on replica {r} of {m}"
             routes[ent[0]][k] = r
             assign[r].append(ent)
+            if sink is not None:
+                sink.span(Span(ROUTE, ("compute", k, r), ent[2], ent[2],
+                               task=ent[0], ready=ent[2], replica=r,
+                               seq=seq_j))
         # ---- replica replay: each replica drains its own FIFO sub-queue
         # under the chain's drain-up-to-cap-or-deadline batching rule
         # release[idx] = (release instant, tx_ready | None if terminal)
@@ -1048,12 +1141,20 @@ def simulate_pool_stream(plans: Sequence[SimPlan],
                     replica_busy[k][r] += comp
                     replica_iv[k][r].append((s, s + comp))
                     replica_bs[k][r].append(1)
+                    if sink is not None:
+                        sink.span(Span(SERVICE, ("compute", k, r), s,
+                                       s + comp, task=idx0, tasks=(idx0,),
+                                       ready=ready0, batch=1))
                     fin = max(s + comp, dd0)
                     free = fin
                     if k == n_hops or (p.exit_hop is not None
                                        and k >= p.exit_hop):
                         done[idx0] = fin
                         release[idx0] = (fin, None)
+                        if sink is not None and p.exit_hop is not None:
+                            sink.span(Span(EXIT_RELEASE, ("compute", k, r),
+                                           fin, fin, task=idx0,
+                                           hop=p.exit_hop))
                     else:
                         off = p.tx_offset[k]
                         tx_ready = fin if off is None or off >= comp \
@@ -1065,6 +1166,15 @@ def simulate_pool_stream(plans: Sequence[SimPlan],
                 replica_busy[k][r] += dur
                 replica_iv[k][r].append((s, s + dur))
                 replica_bs[k][r].append(n_b)
+                if sink is not None:
+                    sink.span(Span(SERVICE, ("compute", k, r), s, s + dur,
+                                   task=idx0,
+                                   tasks=tuple(e[0] for e in batch),
+                                   ready=ready0, batch=n_b))
+                    for (idx_m, _, ready_m, _) in batch[1:]:
+                        if s > ready_m:
+                            sink.span(Span(BATCH_FORM, ("compute", k, r),
+                                           ready_m, s, task=idx_m))
                 end = s + dur
                 fin = end
                 for (idx_m, _, _, dd_m) in batch:
@@ -1074,6 +1184,10 @@ def simulate_pool_stream(plans: Sequence[SimPlan],
                                        and k >= p.exit_hop):
                         done[idx_m] = fin
                         release[idx_m] = (fin, None)
+                        if sink is not None and p.exit_hop is not None:
+                            sink.span(Span(EXIT_RELEASE, ("compute", k, r),
+                                           fin, fin, task=idx_m,
+                                           hop=p.exit_hop))
                     else:
                         release[idx_m] = (fin, fin)
                 free = fin
@@ -1093,6 +1207,9 @@ def simulate_pool_stream(plans: Sequence[SimPlan],
             fwd = rel if rel > fwd else fwd
             if tx_ready is not None:
                 nxt.append((ent[0], tx_ready, fwd))
+                if sink is not None and fwd > rel:
+                    sink.span(Span(SEQ_HOLD, ("link", k), rel, fwd,
+                                   task=ent[0]))
         # ---- link k: serial FIFO, same expressions as simulate_stream
         new_pend: List[Tuple[int, float, float, float]] = []
         for (idx, tx_ready, fwd_j) in nxt:
@@ -1112,6 +1229,12 @@ def simulate_pool_stream(plans: Sequence[SimPlan],
                 else max(t_start + roff, tx_ready)
             fwd_frac = min(max(c_ready - t_start, 0.0), t_dur)
             new_pend.append((idx, t_start + fwd_frac, c_ready, t_done))
+            if sink is not None:
+                sink.span(Span(XFER, ("link", k), t_start, t_done,
+                               task=idx, ready=tx_ready))
+                sink.span(Span(ENQUEUE, ("compute", k + 1),
+                               t_start + fwd_frac, t_start + fwd_frac,
+                               task=idx))
         pend = new_pend
 
     arr_list = list(arrivals)
@@ -1137,7 +1260,8 @@ def multitenant_pool_admission(
         arrivals: Sequence[Sequence[float]],
         policy,
         pools,
-        router) -> Tuple[List[TenantSlot], List[float]]:
+        router,
+        sink=None) -> Tuple[List[TenantSlot], List[float]]:
     """Pool-ingress admission gate: merge per-tenant streams gated by
     *pool* ingress credits.
 
@@ -1187,6 +1311,9 @@ def multitenant_pool_admission(
         assert t in info, f"policy picked non-candidate tenant {t}"
         i = heads[t]
         heads[t] += 1
+        if sink is not None and t_d > arrivals[t][i]:
+            sink.span(Span(CREDIT_WAIT, ("compute", 0), arrivals[t][i],
+                           t_d, task=len(order)))
         order.append((t, i))
         enqueues.append(t_d)
         arr = arrivals[t][i]
@@ -1216,7 +1343,8 @@ def simulate_multitenant_pool_stream(
         pools,
         router,
         links: Optional[Sequence[Optional[LinkProfile]]] = None,
-        batch_caps: Optional[Sequence[int]] = None
+        batch_caps: Optional[Sequence[int]] = None,
+        sink=None
         ) -> MultiTenantPoolStreamResult:
     """Replay tagged multi-tenant streams over pooled tiers: compute the
     pool-credit admission order, then replay the merged tenant-tagged
@@ -1225,7 +1353,7 @@ def simulate_multitenant_pool_stream(
     but every tier-0 *replica* still admits independently, so ingress
     throughput scales with the pool."""
     order, enqueues = multitenant_pool_admission(
-        plans, arrivals, policy, pools, router)
+        plans, arrivals, policy, pools, router, sink=sink)
     assert order, "empty multi-tenant stream"
     merged_plans = [plans[t][i] for (t, i) in order]
     merged_arr = [arrivals[t][i] for (t, i) in order]
@@ -1234,7 +1362,8 @@ def simulate_multitenant_pool_stream(
         batch_caps = [1] + [int(c) for c in batch_caps[1:]]
     res = simulate_pool_stream(merged_plans, merged_arr, pools, router,
                                links=links, batch_caps=batch_caps,
-                               tenants=merged_tenants, enqueues=enqueues)
+                               tenants=merged_tenants, enqueues=enqueues,
+                               sink=sink)
     return MultiTenantPoolStreamResult(stream=res.as_stream_result(),
                                        order=tuple(order),
                                        n_tenants=len(plans), pool=res)

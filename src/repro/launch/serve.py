@@ -20,6 +20,9 @@ from repro.core.costs import (A6000_SERVER, JETSON_NX, WIFI_5GHZ,
 from repro.core.partitioner import coach_offline
 from repro.data.pipeline import CorrelatedTaskStream, make_calibration_set
 from repro.models import model as M
+from repro.obs.bubbles import attribute, chain_resources
+from repro.obs.export import text_summary
+from repro.obs.trace import TraceRecorder
 from repro.serving.engine import CoachEngine, EngineConfig
 
 
@@ -47,9 +50,11 @@ def serve(arch: str, *, smoke: bool = True, requests: int = 200,
     stream = CorrelatedTaskStream(n_labels=16, dim=cfg.d_model,
                                   correlation=correlation, seed=seed)
     feats, labels = make_calibration_set(stream, n=300)
+    rec = TraceRecorder()
     engine = CoachEngine(rt, off.times, JETSON_NX, link, A6000_SERVER,
                          n_labels=16, calib_feats=feats, calib_labels=labels,
-                         boundary_elems=128 * cfg.d_model)
+                         boundary_elems=128 * cfg.d_model,
+                         cfg=EngineConfig(trace=rec))
 
     def classify(task):
         # run the real end segment on the task; its quantized boundary goes
@@ -82,6 +87,10 @@ def serve(arch: str, *, smoke: bool = True, requests: int = 200,
               f"{pr.p99_latency*1e3:.2f}ms thpt={pr.throughput:.1f} it/s "
               f"cloud_bubbles={pr.bubble_fraction('cloud'):.2%} "
               f"(wall {wall:.1f}s)")
+        att = attribute(rec, resources=chain_resources(
+            pr.n_hops, pr.pool_sizes or None))
+        print("bubble attribution (why each resource idled):")
+        print(text_summary(att))
     return stats
 
 

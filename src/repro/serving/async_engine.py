@@ -98,6 +98,8 @@ from repro.core import sim
 from repro.core.costs import LinkProfile
 from repro.core.pipeline import (PipelineResult, TaskPlan,
                                  result_from_stream)
+from repro.obs.trace import (BATCH_FORM, ENQUEUE, EXIT_RELEASE, ROUTE,
+                             SEQ_HOLD, SERVICE, XFER)
 from repro.serving.base import EngineBase, EngineStats
 
 __all__ = ["VirtualClock", "WallClock", "HopQueue", "AsyncHopPipeline",
@@ -374,7 +376,7 @@ class AsyncHopPipeline:
                  clock=None, queue_capacity: int = 0,
                  segment_fn: Optional[Callable[[int, int, Any], Any]] = None,
                  batch_caps: Optional[Sequence[int]] = None,
-                 pools=None, router=None):
+                 pools=None, router=None, sink=None):
         assert n_hops >= 1
         self.n_hops = n_hops
         self.n_seg = n_hops + 1
@@ -396,6 +398,11 @@ class AsyncHopPipeline:
         if self.pools is not None:
             assert router is not None, "pool execution needs a router policy"
         self.router = router
+        # span sink (``repro.obs.trace``): every worker emits the same
+        # spans, at the same virtual instants, as the simulator's staged
+        # replay — the differential pin extends to traces.  ``None``
+        # (default) emits nothing and allocates nothing.
+        self.sink = sink
         self.outputs: dict = {}
 
     def run(self, plan_fn: Callable[[int, float], Any], n_tasks: int,
@@ -445,11 +452,14 @@ class AsyncHopPipeline:
             else list(arrivals[:n_tasks])
         self.outputs = {}
         credits = HopQueue(clock) if admit_fn is not None else None
+        sink = self.sink
 
         def record(idx: int, arrival: float):
             arrs[idx] = arrival
 
         async def admit(q0: HopQueue):
+            emit = sink.span if sink is not None else None
+            res0 = ("compute", 0)
             for i in range(n_tasks):
                 arr = arrivals[i]
                 await clock.sleep_until(arr)
@@ -458,12 +468,20 @@ class AsyncHopPipeline:
                     plan = plan.as_sim_plan(n_hops)
                 assert len(plan.tx) == n_hops, "plan/deployment hop mismatch"
                 payload = payloads[i] if payloads is not None else None
+                if emit is not None:
+                    # put instant = running max of arrivals (serial admitter)
+                    t = clock.now
+                    emit((ENQUEUE, res0, t, t, i))
                 await q0.put(_Msg(i, plan, ready_at=arr, data_done=arr,
                                   payload=payload))
             await q0.put(_STOP)
 
         async def compute_worker(k: int, qin: HopQueue,
                                  qout: Optional[HopQueue]):
+            # span emission is on the hot path: prefix tuples + a bound
+            # sink method, not Span(...) construction (see TraceRecorder)
+            emit = sink.span if sink is not None else None
+            res = ("compute", k, 0)
             cap = self.batch_caps[k]
             while True:
                 if k == 0 and credits is not None:
@@ -503,6 +521,14 @@ class AsyncHopPipeline:
                         comp_busy[k] += dur
                         comp_iv[k].append((s, s + dur))
                         comp_bs[k].append(len(batch))
+                        if emit is not None:
+                            emit((SERVICE, res, s, s + dur, msg.idx,
+                                  tuple(m.idx for m in batch),
+                                  msg.ready_at, len(batch)))
+                            for m in batch[1:]:
+                                if s > m.ready_at:
+                                    emit((BATCH_FORM, res, m.ready_at, s,
+                                          m.idx))
                         await clock.sleep(dur)
                         # scatter completions in FIFO order; each member
                         # still gates on its own upstream data-done, and
@@ -515,6 +541,11 @@ class AsyncHopPipeline:
                                 done[m.idx] = clock.now
                                 exit_hops[m.idx] = p.exit_hop
                                 self.outputs[m.idx] = m.payload
+                                if emit is not None \
+                                        and p.exit_hop is not None:
+                                    t = clock.now
+                                    emit((EXIT_RELEASE, res, t, t, m.idx,
+                                          None, None, None, p.exit_hop))
                             else:
                                 await qout.put(_Msg(
                                     m.idx, p, ready_at=clock.now,
@@ -530,6 +561,9 @@ class AsyncHopPipeline:
                 comp_busy[k] += comp
                 comp_iv[k].append((start, start + comp))
                 comp_bs[k].append(1)
+                if emit is not None:
+                    emit((SERVICE, res, start, start + comp, msg.idx,
+                          (msg.idx,), msg.ready_at, 1))
                 data_done = msg.data_done
                 # a hop-level semantic exit at segment ``exit_hop``
                 # terminates the task on this worker: nothing is ever
@@ -544,6 +578,10 @@ class AsyncHopPipeline:
                         done[msg.idx] = clock.now
                         exit_hops[msg.idx] = p.exit_hop
                         self.outputs[msg.idx] = msg.payload
+                        if emit is not None and p.exit_hop is not None:
+                            t = clock.now
+                            emit((EXIT_RELEASE, res, t, t, msg.idx,
+                                  None, None, None, p.exit_hop))
                     else:
                         await qout.put(_Msg(msg.idx, p, ready_at=clock.now,
                                             data_done=clock.now,
@@ -558,6 +596,9 @@ class AsyncHopPipeline:
 
         async def link_worker(k: int, qin: HopQueue, qout: HopQueue):
             link = self.links[k] if k < len(self.links) else None
+            emit = sink.span if sink is not None else None
+            lres = ("link", k)
+            nres = ("compute", k + 1)
             while True:
                 msg = await qin.get()
                 if msg is _STOP:
@@ -576,10 +617,16 @@ class AsyncHopPipeline:
                     else max(t_start + roff, msg.ready_at)
                 link_busy[k] += dur
                 link_iv[k].append((t_start, t_done))
+                if emit is not None:
+                    emit((XFER, lres, t_start, t_done, msg.idx, None,
+                          msg.ready_at))
                 # hold the packet until the receiver may start, then forward
                 # while (possibly) still transmitting the tail
                 fwd = min(max(c_ready - t_start, 0.0), dur)
                 await clock.sleep(fwd)
+                if emit is not None:
+                    t = clock.now
+                    emit((ENQUEUE, nres, t, t, msg.idx))
                 await qout.put(_Msg(msg.idx, msg.plan, ready_at=c_ready,
                                     data_done=t_done, payload=msg.payload))
                 await clock.sleep(dur - fwd)
@@ -648,11 +695,14 @@ class AsyncHopPipeline:
             else list(arrivals[:n_tasks])
         self.outputs = {}
         credits = HopQueue(clock) if admit_fn is not None else None
+        sink = self.sink
 
         def record(idx: int, arrival: float):
             arrs[idx] = arrival
 
         async def admit(q0: HopQueue):
+            emit = sink.span if sink is not None else None
+            res0 = ("compute", 0)
             for i in range(n_tasks):
                 arr = arrivals[i]
                 await clock.sleep_until(arr)
@@ -661,6 +711,9 @@ class AsyncHopPipeline:
                     plan = plan.as_sim_plan(n_hops)
                 assert len(plan.tx) == n_hops, "plan/deployment hop mismatch"
                 payload = payloads[i] if payloads is not None else None
+                if emit is not None:
+                    t = clock.now
+                    emit((ENQUEUE, res0, t, t, i))
                 await q0.put(_Msg(i, plan, ready_at=arr, data_done=arr,
                                   payload=payload))
             await q0.put(_STOP)
@@ -672,6 +725,7 @@ class AsyncHopPipeline:
             # per-tier state, never the clock, so they match the staged
             # simulator's placements exactly
             seq = 0
+            emit = sink.span if sink is not None else None
             while True:
                 msg = await qin.get()
                 if msg is _STOP:
@@ -683,12 +737,21 @@ class AsyncHopPipeline:
                 routes[msg.idx][k] = r
                 msg.seq = seq
                 seq += 1
+                if emit is not None:
+                    # the placement is a function of the message, not the
+                    # clock, so the span is stamped at the task's ready
+                    # instant — identically to the staged dispatch
+                    t = msg.ready_at
+                    emit((ROUTE, ("compute", k, r), t, t, msg.idx, None,
+                          t, None, None, r, msg.seq))
                 await rqs[r].put(msg)
 
         async def replica_worker(k: int, r: int, qin: HopQueue,
                                  sq: Optional[HopQueue]):
             # the chain compute worker, speed-scaled; completions are
             # released to the pool's sequencer as (seq, msg | None)
+            emit = sink.span if sink is not None else None
+            res = ("compute", k, r)
             cap = self.batch_caps[k]
             speed = pools[k].speeds[r]
             while True:
@@ -724,6 +787,14 @@ class AsyncHopPipeline:
                         replica_busy[k][r] += dur
                         replica_iv[k][r].append((s, s + dur))
                         replica_bs[k][r].append(len(batch))
+                        if emit is not None:
+                            emit((SERVICE, res, s, s + dur, msg.idx,
+                                  tuple(m.idx for m in batch),
+                                  msg.ready_at, len(batch)))
+                            for m in batch[1:]:
+                                if s > m.ready_at:
+                                    emit((BATCH_FORM, res, m.ready_at, s,
+                                          m.idx))
                         await clock.sleep(dur)
                         for m in batch:
                             await clock.sleep_until(m.data_done)
@@ -733,6 +804,11 @@ class AsyncHopPipeline:
                                 done[m.idx] = clock.now
                                 exit_hops[m.idx] = p.exit_hop
                                 self.outputs[m.idx] = m.payload
+                                if emit is not None \
+                                        and p.exit_hop is not None:
+                                    t = clock.now
+                                    emit((EXIT_RELEASE, res, t, t, m.idx,
+                                          None, None, None, p.exit_hop))
                                 if sq is not None:
                                     await sq.put((m.seq, None))
                             else:
@@ -750,6 +826,9 @@ class AsyncHopPipeline:
                 replica_busy[k][r] += comp
                 replica_iv[k][r].append((start, start + comp))
                 replica_bs[k][r].append(1)
+                if emit is not None:
+                    emit((SERVICE, res, start, start + comp, msg.idx,
+                          (msg.idx,), msg.ready_at, 1))
                 data_done = msg.data_done
                 last = k == n_hops or \
                     (p.exit_hop is not None and k >= p.exit_hop)
@@ -761,6 +840,10 @@ class AsyncHopPipeline:
                         done[msg.idx] = clock.now
                         exit_hops[msg.idx] = p.exit_hop
                         self.outputs[msg.idx] = msg.payload
+                        if emit is not None and p.exit_hop is not None:
+                            t = clock.now
+                            emit((EXIT_RELEASE, res, t, t, msg.idx,
+                                  None, None, None, p.exit_hop))
                         if sq is not None:
                             await sq.put((msg.seq, None))
                     else:
@@ -787,6 +870,8 @@ class AsyncHopPipeline:
             buf: dict = {}
             next_seq = 0
             stops = 0
+            emit = sink.span if sink is not None else None
+            lres = ("link", k)
             while True:
                 item = await sq.get()
                 if item is _STOP:
@@ -798,15 +883,28 @@ class AsyncHopPipeline:
                         return
                     continue
                 s_id, out = item
-                buf[s_id] = out
+                # the get returns at the release's put instant (the
+                # sequencer never sleeps between gets, so the clock
+                # cannot advance past a queued release) — stamp it as
+                # the release instant for the hold span
+                buf[s_id] = (out, clock.now)
                 while next_seq in buf:
-                    nxt = buf.pop(next_seq)
+                    nxt, rel = buf.pop(next_seq)
                     next_seq += 1
                     if nxt is not None:
+                        # forward instant = running max of releases; any
+                        # excess over this task's own release is the
+                        # sequencer restoring admission order
+                        if emit is not None and clock.now > rel:
+                            emit((SEQ_HOLD, lres, rel, clock.now,
+                                  nxt.idx))
                         await qout.put(nxt)
 
         async def link_worker(k: int, qin: HopQueue, qout: HopQueue):
             link = self.links[k] if k < len(self.links) else None
+            emit = sink.span if sink is not None else None
+            lres = ("link", k)
+            nres = ("compute", k + 1)
             while True:
                 msg = await qin.get()
                 if msg is _STOP:
@@ -824,8 +922,14 @@ class AsyncHopPipeline:
                     else max(t_start + roff, msg.ready_at)
                 link_busy[k] += dur
                 link_iv[k].append((t_start, t_done))
+                if emit is not None:
+                    emit((XFER, lres, t_start, t_done, msg.idx, None,
+                          msg.ready_at))
                 fwd = min(max(c_ready - t_start, 0.0), dur)
                 await clock.sleep(fwd)
+                if emit is not None:
+                    t = clock.now
+                    emit((ENQUEUE, nres, t, t, msg.idx))
                 await qout.put(_Msg(msg.idx, msg.plan, ready_at=c_ready,
                                     data_done=t_done, payload=msg.payload,
                                     tenant=msg.tenant))
@@ -880,7 +984,7 @@ def run_pipeline_async(plans: Sequence[TaskPlan],
                        segment_fn=None,
                        payloads: Optional[Sequence[Any]] = None,
                        batch_caps: Optional[Sequence[int]] = None,
-                       pools=None, router=None) -> PipelineResult:
+                       pools=None, router=None, sink=None) -> PipelineResult:
     """Async-executor counterpart of ``core.pipeline.run_pipeline``: same
     plan normalization and result type, but the stream is *executed* by
     per-resource workers instead of replayed by ``simulate_stream``.
@@ -888,7 +992,10 @@ def run_pipeline_async(plans: Sequence[TaskPlan],
     two timelines agree to float precision (including per-tier
     micro-batching via ``batch_caps``).  ``pools`` + ``router`` spawn one
     worker per replica behind per-pool dispatchers and pin against
-    ``sim.simulate_pool_stream`` instead."""
+    ``sim.simulate_pool_stream`` instead.  ``sink`` (a
+    ``repro.obs.trace`` span sink) records the executed timeline; the
+    same call against ``core.pipeline.run_pipeline`` yields a matching
+    trace (``assert_traces_match``)."""
     n = len(plans)
     if arrivals is None:
         arrivals = [i * arrival_period for i in range(n)]
@@ -900,7 +1007,7 @@ def run_pipeline_async(plans: Sequence[TaskPlan],
                             queue_capacity=queue_capacity,
                             segment_fn=segment_fn,
                             batch_caps=batch_caps,
-                            pools=pools, router=router)
+                            pools=pools, router=router, sink=sink)
     res = pipe.run(lambda i, _arr: sps[i], n, arrivals, payloads=payloads)
     if isinstance(res, sim.PoolStreamResult):
         from repro.core.pipeline import result_from_pool_stream
@@ -935,7 +1042,8 @@ class AsyncCoachEngine(EngineBase):
         pipe = AsyncHopPipeline(n_hops, links=self.links, clock=clock,
                                 queue_capacity=self.cfg.queue_capacity,
                                 batch_caps=self.batch_caps,
-                                pools=self.pools, router=self.make_router())
+                                pools=self.pools, router=self.make_router(),
+                                sink=self.cfg.trace)
         res = pipe.run(admit, n, [i * arrival_period for i in range(n)])
         if isinstance(res, sim.PoolStreamResult):
             from repro.core.pipeline import result_from_pool_stream

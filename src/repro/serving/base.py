@@ -14,7 +14,7 @@ so concurrency can never change decisions, only timing.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -54,6 +54,12 @@ class EngineConfig:
     #                                pool_sizes when both are given)
     router: str = "jsq"            # routing policy name (serving.routing)
     router_seed: int = 0           # seed for the router's RNG streams
+    # ---- observability (repro.obs): both default to None = fully off,
+    #      zero overhead (every emission site guards on ``is not None``)
+    trace: Any = None    # span sink (e.g. obs.trace.TraceRecorder); the
+    #                      engine's executor emits its timeline into it
+    metrics: Any = None  # obs.metrics.MetricsRegistry; populated from the
+    #                      run's result (and trace, when both are set)
 
 
 @dataclasses.dataclass
@@ -192,7 +198,10 @@ class EngineBase:
         if self.pools is None:
             return None
         from repro.serving.routing import make_router
-        return make_router(self.cfg.router, seed=self.cfg.router_seed)
+        router = make_router(self.cfg.router, seed=self.cfg.router_seed)
+        if self.cfg.metrics is not None:
+            router.attach_metrics(self.cfg.metrics)
+        return router
 
     # ------------------------------------------------------------ decisions
     @staticmethod
@@ -320,6 +329,8 @@ class EngineBase:
     def _stats(self, pipeline: PipelineResult, n: int, exits: int,
                bits_used: Sequence[int], wire_bits_total: float,
                correct: Sequence[bool]) -> EngineStats:
+        if self.cfg.metrics is not None:
+            self._populate_metrics(pipeline)
         return EngineStats(
             pipeline=pipeline,
             exit_ratio=exits / n,
@@ -327,3 +338,20 @@ class EngineBase:
             wire_kb_per_task=wire_bits_total / 8e3 / n,
             accuracy=float(np.mean(correct)),
         )
+
+    def _populate_metrics(self, pipeline: PipelineResult) -> None:
+        """Fill ``cfg.metrics`` from the finished run: result gauges
+        always; span-derived counters/histograms and per-cause bubble
+        seconds when ``cfg.trace`` recorded the run."""
+        from repro.obs.bubbles import attribute, chain_resources
+        from repro.obs.metrics import (populate_from_attribution,
+                                       populate_from_result,
+                                       populate_from_trace)
+        reg = self.cfg.metrics
+        populate_from_result(reg, pipeline)
+        trace = self.cfg.trace
+        if trace is not None and len(getattr(trace, "spans", ())) > 0:
+            populate_from_trace(reg, trace)
+            att = attribute(trace, resources=chain_resources(
+                pipeline.n_hops, pipeline.pool_sizes or None))
+            populate_from_attribution(reg, att)

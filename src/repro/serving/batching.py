@@ -100,17 +100,21 @@ def auto_batch_caps(compute: Sequence[float], t_fixed: Sequence[float],
     return caps
 
 
-def realized_batch_sizes(pr) -> List[float]:
+def realized_batch_sizes(pr, metrics=None) -> List[float]:
     """Mean realized batch size per compute tier of a finished run.
 
     Each micro-batch occupies its tier for one busy interval, so the
     realized mean batch size at tier ``k`` is (tasks that ran on tier k)
     / (busy intervals on tier k).  ``pr`` is a ``PipelineResult`` (or
     anything with ``tasks`` carrying ``exit_hop`` and
-    ``compute_intervals``)."""
+    ``compute_intervals``).  ``metrics`` (an
+    ``obs.metrics.MetricsRegistry``) additionally gets one
+    ``tier{k}.realized_batch`` gauge per tier."""
     out: List[float] = []
     for k, iv in enumerate(pr.compute_intervals):
         n_tasks = sum(1 for t in pr.tasks
                       if sim.occupies_compute(t.exit_hop, k))
         out.append(n_tasks / len(iv) if iv else 0.0)
+        if metrics is not None:
+            metrics.set_gauge(f"tier{k}.realized_batch", out[-1])
     return out

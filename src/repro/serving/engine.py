@@ -59,6 +59,7 @@ class CoachEngine(EngineBase):
             self.account(dec, feats, pred, task, wire_bits, acc)
         pr = run_pipeline(plans, arrival_period=arrival_period,
                           links=self.links, batch_caps=self.batch_caps,
-                          pools=self.pools, router=self.make_router())
+                          pools=self.pools, router=self.make_router(),
+                          sink=self.cfg.trace)
         return self._stats(pr, len(tasks), acc["exits"], acc["bits"],
                            acc["wire"], acc["correct"])

@@ -55,6 +55,17 @@ class RouterPolicy:
     def __init__(self, seed: int = 0):
         self.seed = int(seed)
         self.pools: Tuple[PoolSpec, ...] = ()
+        self._metrics = None
+
+    def attach_metrics(self, registry) -> None:
+        """Optional live counter hook (``obs.metrics.MetricsRegistry``):
+        every ``route`` call increments ``router.tier{k}.r{r}``.  Counts
+        raw ``route`` invocations — including any projection pre-run an
+        admission gate performs before the replay resets the state — so
+        for placement counts pinned across engines prefer the trace-
+        derived ``tier{k}.route.r{r}`` counters
+        (``obs.metrics.populate_from_trace``).  Survives ``reset``."""
+        self._metrics = registry
 
     def reset(self, pools: Sequence[PoolSpec]) -> None:
         self.pools = tuple(pools)
@@ -105,6 +116,8 @@ class RouterPolicy:
         fin = self._projected_fin(k, r, ready, compute)
         self._free[k][r] = fin
         self._fins[k][r].append(fin)
+        if self._metrics is not None:
+            self._metrics.inc(f"router.tier{k}.r{r}")
         return r
 
 

@@ -56,6 +56,7 @@ from repro.core import sim
 from repro.core.pipeline import (PipelineResult, TaskPlan, TaskRecord,
                                  result_from_pool_stream,
                                  result_from_stream)
+from repro.obs.trace import CREDIT_WAIT, ENQUEUE, Span
 from repro.serving.async_engine import (AsyncHopPipeline, HopQueue,
                                         VirtualClock, _Msg, _STOP)
 from repro.serving.base import EngineBase, EngineConfig, EngineStats
@@ -252,7 +253,7 @@ class MultiTenantHopPipeline:
                  policy: AdmissionPolicy | str = "fifo",
                  weights: Optional[Sequence[float]] = None,
                  batch_caps: Optional[Sequence[int]] = None,
-                 pools=None, router=None):
+                 pools=None, router=None, sink=None):
         # tier 0 never batches under multi-tenancy: admission is credit-
         # gated one task at a time, so the ingress queue holds at most
         # one task and a tier-0 drain would diverge from the admission
@@ -268,7 +269,7 @@ class MultiTenantHopPipeline:
                                      queue_capacity=queue_capacity,
                                      segment_fn=segment_fn,
                                      batch_caps=batch_caps,
-                                     pools=pools, router=router)
+                                     pools=pools, router=router, sink=sink)
         self.policy = make_policy(policy, weights=weights)
 
     @property
@@ -293,6 +294,7 @@ class MultiTenantHopPipeline:
         assert total > 0, "empty multi-tenant stream"
         policy = self.policy
         policy.reset(n_t)
+        sink = self.pipe.sink
         ready: List[collections.deque] = [collections.deque()
                                           for _ in range(n_t)]
         served = [0] * n_t
@@ -342,6 +344,16 @@ class MultiTenantHopPipeline:
                     admitted += 1
                     order.append((t, i))
                     record(idx, arr)
+                    if sink is not None:
+                        # dispatch instant = the admission gate's t_d
+                        # (``sim.multitenant_admission_order`` /
+                        # ``multitenant_pool_admission`` compute the same
+                        # instants arithmetically)
+                        if clock.now > arr:
+                            sink.span(Span(CREDIT_WAIT, ("compute", 0),
+                                           arr, clock.now, task=idx))
+                        sink.span(Span(ENQUEUE, ("compute", 0), clock.now,
+                                       clock.now, task=idx))
                     await q0.put(_Msg(idx, plan, ready_at=arr, data_done=arr,
                                       payload=payload, tenant=t))
                 await q0.put(_STOP)
@@ -384,7 +396,7 @@ def run_multitenant_async(plans_by_tenant: Sequence[Sequence[TaskPlan]],
                           links=None, queue_capacity: int = 0, clock=None,
                           segment_fn=None, payloads=None,
                           batch_caps: Optional[Sequence[int]] = None,
-                          pools=None, router=None
+                          pools=None, router=None, sink=None
                           ) -> sim.MultiTenantStreamResult:
     """Async-executor counterpart of ``sim.simulate_multitenant_stream``
     (or, with ``pools=``, of ``sim.simulate_multitenant_pool_stream``):
@@ -402,7 +414,7 @@ def run_multitenant_async(plans_by_tenant: Sequence[Sequence[TaskPlan]],
                                   queue_capacity=queue_capacity,
                                   segment_fn=segment_fn, policy=policy,
                                   weights=weights, batch_caps=batch_caps,
-                                  pools=pools, router=router)
+                                  pools=pools, router=router, sink=sink)
     plan_fns = [(lambda t: lambda i, _arr: sps[t][i])(t)
                 for t in range(len(sps))]
     return pipe.run(plan_fns, arrivals_by_tenant, payloads=payloads)
@@ -556,10 +568,14 @@ class MultiTenantCoachEngine:
         # admission holds the ingress queue at depth <= 1, so tier 0 can
         # never batch: pin ingress_cap = 1 so the auto batch-size finder
         # redistributes tier 0's slack share to tiers that can use it.
+        # trace/metrics stay on the *shared* config only: the trace is a
+        # whole-chain timeline, so per-tenant _stats must not re-populate
+        # the registry once per tenant (run_streams fills it once).
         self.engines: List[EngineBase] = [
             EngineBase(runtime, stage_times, end_dev, link, cloud_dev,
                        n_labels, calib_feats, calib_labels,
-                       cfg=dataclasses.replace(self.cfg, ingress_cap=1),
+                       cfg=dataclasses.replace(self.cfg, ingress_cap=1,
+                                               trace=None, metrics=None),
                        boundary_elems=boundary_elems, links=links,
                        hop_bits_offline=hop_bits_offline,
                        hop_calib=hop_calib)
@@ -624,7 +640,7 @@ class MultiTenantCoachEngine:
             n_hops, links=self.links, clock=clock,
             queue_capacity=self.cfg.queue_capacity, policy=self.policy,
             batch_caps=self.batch_caps, pools=self.pools,
-            router=self.engines[0].make_router())
+            router=self.engines[0].make_router(), sink=self.cfg.trace)
         mt = pipe.run([tenant_plan_fn(t) for t in range(n_t)], arrivals)
 
         reports = []
@@ -645,6 +661,21 @@ class MultiTenantCoachEngine:
             merged = result_from_pool_stream(mt.pool)
         else:
             merged = result_from_stream(mt.stream)
+        if self.cfg.metrics is not None:
+            # once, from the merged chain view (the per-tenant engines
+            # run with metrics=None — see __init__)
+            from repro.obs.bubbles import attribute, chain_resources
+            from repro.obs.metrics import (populate_from_attribution,
+                                           populate_from_result,
+                                           populate_from_trace)
+            reg = self.cfg.metrics
+            populate_from_result(reg, merged)
+            trace = self.cfg.trace
+            if trace is not None and len(getattr(trace, "spans", ())) > 0:
+                populate_from_trace(reg, trace)
+                populate_from_attribution(reg, attribute(
+                    trace, resources=chain_resources(
+                        merged.n_hops, merged.pool_sizes or None)))
         return MultiTenantStats(
             pipeline=merged, order=mt.order,
             reports=reports, policy=self.policy.name,

@@ -16,6 +16,7 @@ collect_ignore = []
 if importlib.util.find_spec("hypothesis") is None:
     collect_ignore += [
         "test_kernels.py",
+        "test_obs_props.py",
         "test_online.py",
         "test_partitioner.py",
         "test_pipeline.py",
