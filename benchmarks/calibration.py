@@ -1,0 +1,180 @@
+"""Wall-clock calibration bench: measured vs modeled stage times.
+
+Every other bench in this harness prices stages with the *analytic* cost
+model (FLOPs / bytes through device and link profiles) and replays them
+on virtual clocks.  This module closes the loop: it times the real fused
+boundary pass, the unfused quantize+probe pair it replaces, a real model
+segment forward, and a real ``WallClock`` pipeline run, and compares
+each measurement against a prediction priced from *host-calibrated*
+primitives (a memory-bandwidth probe and a matmul-rate probe run on this
+machine, so the modeled times are in this host's units rather than the
+paper devices').
+
+Rows are emitted as ``kind = "calibration"`` into ``BENCH_pipeline.json``
+via ``bench_io`` and gated by ``benchmarks/validate_bench.py``: every row
+carries ``measured_s`` / ``modeled_s`` / ``ratio``, the ratio must stay
+inside a configurable band (``COACH_CALIB_RATIO_MIN`` /
+``COACH_CALIB_RATIO_MAX`` — wall time on shared CI runners is noisy, so
+the default band is wide and per-runner overridable), and the fused
+boundary rows carry the derived HBM-traffic column: the fused single-pass
+kernel must move >= 1.5x fewer boundary bytes than the unfused
+quantize-then-probe pair (which reads the (B, S, D) activation twice).
+
+Set ``COACH_CALIBRATION_SKIP=1`` to emit no rows at all (the validator
+skips the calibration gate when a runner contributed no measured rows).
+"""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_io import emit_pipeline_rows
+from repro.configs import get_config
+from repro.core.collab import CollabRuntime
+from repro.core.pipeline import TaskPlan
+from repro.kernels import ops, ref
+from repro.models import model as M
+from repro.serving.async_engine import (VirtualClock, WallClock,
+                                        run_pipeline_async)
+
+HEADER = "calibration,name,measured_s,modeled_s,ratio,hbm_bytes_ratio"
+
+# fused-boundary bench shape: (B, S, D) activation probed against L centers
+B, S, D, L = 8, 512, 256, 64
+
+
+def _time(fn, *args, iters: int = 10) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _host_rates():
+    """Calibrate this host's streaming bandwidth (bytes/s, via a jitted
+    elementwise copy) and dense matmul rate (flops/s)."""
+    a = jax.random.normal(jax.random.PRNGKey(0), (32 * 1024 * 1024,))
+    t = _time(jax.jit(lambda x: x * 1.0), a)
+    bw = 2 * a.size * 4 / t
+    m = jax.random.normal(jax.random.PRNGKey(1), (1024, 1024))
+    t = _time(jax.jit(lambda x: x @ x), m)
+    rate = 2 * 1024 ** 3 / t
+    return bw, rate
+
+
+def _boundary_bytes(bits: int):
+    """Analytic HBM traffic of one boundary hop.  The unfused pair reads
+    the (B, S, D) activation twice (quantize pass + probe pass); the
+    fused kernel reads it once.  Both write the same wire payload and
+    probe outputs."""
+    p = (D + 1) // 2 if bits == 4 else D
+    act = B * S * D * 4
+    centers = L * D * 4
+    wire = B * S * p + 2 * B * S * 4            # packed + scale/zp
+    probe_out = B * D * 4 + B * L * 4 + 2 * B * 4  # feat + sims + sep/best
+    fused = act + centers + wire + probe_out
+    unfused = 2 * act + centers + wire + probe_out
+    return fused, unfused
+
+
+def _boundary_flops():
+    quant = 6 * B * S * D                # min/max/scale/div/round/clip
+    probe = 2 * B * S * D + 2 * B * D * L  # GAP + normalize + cosine dot
+    return quant + probe
+
+
+def _row(name, measured, modeled, **extra):
+    d = {"name": name, "backend": jax.default_backend(),
+         "measured_s": measured, "modeled_s": modeled,
+         "ratio": measured / max(modeled, 1e-300)}
+    d.update(extra)
+    return d
+
+
+def _boundary_rows(bw, rate):
+    on_tpu = jax.default_backend() == "tpu"
+    path = "pallas" if on_tpu else "ref"
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (B, S, D))
+    centers = jax.random.normal(jax.random.PRNGKey(3), (L, D))
+    probe = ops.probe_cache if on_tpu else jax.jit(ref.semantic_probe_ref)
+    flops = _boundary_flops()
+    rows = []
+    for bits in (4, 8):
+        fused_b, unfused_b = _boundary_bytes(bits)
+        meas = _time(lambda t, c, b=bits: ops.boundary_pass(t, c, b),
+                     x, centers)
+        rows.append(_row(
+            f"fused_boundary_b{bits}", meas, fused_b / bw + flops / rate,
+            path=path, bits=bits, shape=f"{B}x{S}x{D}xL{L}",
+            hbm_bytes_fused=fused_b, hbm_bytes_unfused=unfused_b,
+            hbm_bytes_ratio=unfused_b / fused_b))
+        meas = (_time(lambda t, b=bits:
+                      ops.quantize_activation(t, b, use_kernel=on_tpu), x)
+                + _time(probe, x, centers))
+        rows.append(_row(
+            f"unfused_boundary_b{bits}", meas,
+            unfused_b / bw + flops / rate,
+            path=path, bits=bits, shape=f"{B}x{S}x{D}xL{L}"))
+    return rows
+
+
+def _segment_row(bw, rate):
+    cfg = get_config("gemma2-2b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rt = CollabRuntime(cfg, params, cut_group=1)
+    seq = 8
+    if cfg.embed_inputs:
+        inp = jax.random.normal(jax.random.PRNGKey(4), (B, seq, cfg.d_model))
+    else:
+        inp = jax.random.randint(jax.random.PRNGKey(4), (B, seq),
+                                 0, cfg.vocab_size, jnp.int32)
+    meas = _time(lambda t: rt._seg_fns[0](rt.p_end, t), inp)
+    n_params = sum(int(p.size) for p in jax.tree_util.tree_leaves(rt.p_end))
+    modeled = 2 * n_params * B * seq / rate + n_params * 4 / bw
+    return _row("segment_forward_end", meas, modeled,
+                path="xla", shape=f"{B}x{seq}x{cfg.d_model}",
+                model=cfg.name)
+
+
+def _pipeline_row():
+    """Real-time executor vs its own virtual-clock event model: the same
+    plans on ``WallClock`` (actual ``asyncio.sleep``) and ``VirtualClock``
+    (discrete events).  The ratio is the executor's wall fidelity."""
+    plans = [TaskPlan.multihop((0.004, 0.004), (0.002,))
+             for _ in range(12)]
+    modeled = run_pipeline_async(plans, arrival_period=0.004,
+                                 clock=VirtualClock()).makespan
+    meas = run_pipeline_async(plans, arrival_period=0.004,
+                              clock=WallClock()).makespan
+    return _row("pipeline_wall", meas, modeled, path="async",
+                shape="12tasks_2hops")
+
+
+def run(out_dir=None):
+    rows_csv = [HEADER]
+    if os.environ.get("COACH_CALIBRATION_SKIP"):
+        rows_csv.append("# skipped (COACH_CALIBRATION_SKIP set)")
+        return rows_csv
+    bw, rate = _host_rates()
+    rows = _boundary_rows(bw, rate)
+    rows.append(_segment_row(bw, rate))
+    rows.append(_pipeline_row())
+    for r in rows:
+        hr = r.get("hbm_bytes_ratio")
+        rows_csv.append(
+            f"calibration,{r['name']},{r['measured_s']:.6f},"
+            f"{r['modeled_s']:.6f},{r['ratio']:.3f},"
+            + (f"{hr:.3f}" if hr is not None else ""))
+    if out_dir is not None:
+        emit_pipeline_rows(out_dir, "calibration", rows)
+    return rows_csv
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

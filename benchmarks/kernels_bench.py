@@ -1,14 +1,24 @@
-"""Kernel microbenchmarks: us/call for the UAQ quantize/dequantize and
-semantic-probe paths (jnp reference semantics jitted on this host; the
-Pallas TPU kernels are validated in interpret mode and bench-able on real
-TPUs with the same entry points)."""
+"""Kernel microbenchmarks: us/call for the shared wire/probe entry
+points in ``repro.kernels.ops`` — the *same* dispatchers the runtime
+uses, so on a TPU host these rows time the Pallas kernels and elsewhere
+they time the jitted jnp references (each row is tagged with the
+``path`` it actually took).  The fused single-pass boundary hop
+(``ops.boundary_pass``) is benched next to the unfused
+quantize-then-probe pair it replaces.
+
+Rows are also emitted as ``kind = "kernels"`` into the canonical
+``BENCH_pipeline.json`` via ``bench_io`` and schema-checked by
+``benchmarks/validate_bench.py``."""
 
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from benchmarks.bench_io import emit_pipeline_rows
+from repro.kernels import ops, ref
+
+HEADER = "kernels,name,us_per_call,path,derived"
 
 
 def _bench(fn, *args, iters=20) -> float:
@@ -22,27 +32,42 @@ def _bench(fn, *args, iters=20) -> float:
 
 
 def run(out_dir=None):
-    rows = ["kernels,name,us_per_call,derived"]
+    on_tpu = jax.default_backend() == "tpu"
+    path = "pallas" if on_tpu else "ref"
+    backend = jax.default_backend()
+    rows_csv = [HEADER]
+    rows = []
+
+    def add(name, us, derived=""):
+        rows_csv.append(f"kernels,{name},{us:.1f},{path},{derived}")
+        rows.append({"name": name, "us_per_call": us, "path": path,
+                     "backend": backend, "derived": derived})
+
     key = jax.random.PRNGKey(0)
     for (m, n) in ((1024, 2304), (4096, 2304)):
         x = jax.random.normal(key, (m, n))
         for bits in (4, 8):
-            q = jax.jit(lambda t, b=bits: ref.uaq_quantize_ref(t, b))
+            q = jax.jit(lambda t, b=bits:
+                        ops.quantize_activation(t, b, use_kernel=on_tpu))
             us = _bench(q, x)
             gbps = x.size * 4 / (us / 1e6) / 1e9
-            rows.append(f"kernels,uaq_quant_{m}x{n}_b{bits},{us:.1f},"
-                        f"{gbps:.2f}GB/s")
+            add(f"uaq_quant_{m}x{n}_b{bits}", us, f"{gbps:.2f}GB/s")
             p, s, z = q(x)
-            dq = jax.jit(lambda pp, ss, zz, b=bits:
-                         ref.uaq_dequantize_ref(pp, ss, zz, b))
+            dq = jax.jit(lambda pp, ss, zz, b=bits: ops.dequantize_activation(
+                pp, ss, zz, b, use_kernel=on_tpu, channels=n))
             us = _bench(dq, p, s, z)
-            rows.append(f"kernels,uaq_dequant_{m}x{n}_b{bits},{us:.1f},")
+            add(f"uaq_dequant_{m}x{n}_b{bits}", us)
     xb = jax.random.normal(key, (16, 512, 256))
     c = jax.random.normal(key, (100, 256))
-    probe = jax.jit(ref.semantic_probe_ref)
+    probe = ops.probe_cache if on_tpu else jax.jit(ref.semantic_probe_ref)
     us = _bench(probe, xb, c)
-    rows.append(f"kernels,semantic_probe_16x512x256_L100,{us:.1f},")
-    return rows
+    add("semantic_probe_16x512x256_L100", us)
+    for bits in (4, 8):
+        us = _bench(lambda t, cc, b=bits: ops.boundary_pass(t, cc, b), xb, c)
+        add(f"fused_boundary_16x512x256_L100_b{bits}", us)
+    if out_dir is not None:
+        emit_pipeline_rows(out_dir, "kernels", rows)
+    return rows_csv
 
 
 if __name__ == "__main__":

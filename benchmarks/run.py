@@ -14,9 +14,9 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 from benchmarks import (ablation, arch_partition, batching, bubbles,
-                        fig1_locality, fig2_schemes, fig5_dynamic,
-                        fig6_fig7_bandwidth, kernels_bench, multihop,
-                        multitenant, planner, roofline, routing,
+                        calibration, fig1_locality, fig2_schemes,
+                        fig5_dynamic, fig6_fig7_bandwidth, kernels_bench,
+                        multihop, multitenant, planner, roofline, routing,
                         table1_latency, table2_context)
 
 MODULES = {
@@ -28,7 +28,8 @@ MODULES = {
     "fig67": fig6_fig7_bandwidth,
     "ablation": ablation,
     "arch_partition": arch_partition,
-    "kernels": kernels_bench,
+    "kernels": kernels_bench,    # us/call of the shared ops entry points
+    "calibration": calibration,  # measured-vs-modeled stage times, gated
     # multihop + multitenant + planner merge their rows into one
     # canonical BENCH_pipeline.json via benchmarks.bench_io
     "multihop": multihop,        # 2-hop vs 3-hop paired sim/async rows

@@ -57,14 +57,35 @@ alone*: ``busy + sum(causes) == horizon`` per resource.  Async rows
 additionally carry ``trace_overhead_pct``, gated < 5% (the cost of
 running the executor with a live recorder vs tracing disabled).
 
+``kind = "kernels"``: microbenchmark rows from
+``benchmarks/kernels_bench.py`` — each names the shared
+``repro.kernels.ops`` entry point it timed, a positive ``us_per_call``,
+and the dispatch ``path`` actually taken (``pallas`` on TPU hosts,
+``ref`` elsewhere) plus the ``backend``.
+
+``kind = "calibration"``: measured-vs-modeled stage times from
+``benchmarks/calibration.py`` — every row carries a positive
+``measured_s`` (real wall time), ``modeled_s`` (priced from
+host-calibrated bandwidth/matmul primitives) and their ``ratio``
+(re-derived here from the payload).  The gate: the ratio must stay
+inside a configurable band (``COACH_CALIB_RATIO_MIN`` /
+``COACH_CALIB_RATIO_MAX`` env overrides — wall time on shared runners
+is noisy, so the default band is wide) on every runner that contributed
+measured rows; an artifact with no calibration rows skips the gate
+entirely.  The ``fused_boundary_*`` rows additionally carry the derived
+HBM-traffic columns, gated: the fused single-pass boundary kernel must
+move >= 1.5x fewer bytes than the unfused quantize-then-probe pair.
+
 Rows of the engine-bearing kinds missing an explicit ``engine`` are
 rejected outright (planner rows describe the search, not an executor,
-and carry no engine).
+and carry no engine; kernels/calibration rows time a host, not an
+engine).
 """
 
 from __future__ import annotations
 
 import json
+import os
 import sys
 from pathlib import Path
 
@@ -109,6 +130,18 @@ BUBBLE_CAUSES = {
     "exit_released",
 }
 BUBBLE_CONFIGS = {"chain", "exits", "pool"}
+#: dispatch paths a kernels microbenchmark row may have taken
+KERNEL_PATHS = {"pallas", "ref", "xla", "async"}
+#: measured/modeled wall-time band for ``calibration`` rows.  The model
+#: is priced from host-calibrated primitives, but shared CI runners are
+#: noisy and CPU backends are not bandwidth-shaped like a TPU, so the
+#: default band is wide; tighten per runner via the env overrides.
+CALIB_RATIO_MIN = float(os.environ.get("COACH_CALIB_RATIO_MIN", "0.02"))
+CALIB_RATIO_MAX = float(os.environ.get("COACH_CALIB_RATIO_MAX", "50.0"))
+#: the fused boundary pass must move this factor fewer HBM bytes than
+#: the unfused quantize-then-probe pair it replaces (one activation
+#: read instead of two)
+CALIB_HBM_RATIO_MIN = 1.5
 ENGINES = {"sim", "async"}
 POLICIES = {"fifo", "rr", "wdrr"}
 ROUTER_POLICIES = {"jsq", "po2", "random"}
@@ -160,6 +193,51 @@ def _check_planner(i: int, row: dict) -> None:
     # the fast scorer is a pure speedup: a mismatching argmin is a bug
     assert row.get("argmin_match") is True, \
         f"row {i}: planner argmin_match must be true"
+
+
+def _check_kernels(i: int, row: dict) -> None:
+    assert isinstance(row.get("name"), str) and row["name"], \
+        f"row {i}: kernels row needs a name"
+    us = row.get("us_per_call")
+    assert isinstance(us, (int, float)) and us > 0, \
+        f"row {i}: bad us_per_call={us!r}"
+    assert row.get("path") in KERNEL_PATHS, \
+        f"row {i}: path must be one of {sorted(KERNEL_PATHS)}"
+    assert isinstance(row.get("backend"), str) and row["backend"], \
+        f"row {i}: kernels row needs a backend"
+
+
+def _check_calibration(i: int, row: dict) -> None:
+    assert isinstance(row.get("name"), str) and row["name"], \
+        f"row {i}: calibration row needs a name"
+    assert isinstance(row.get("backend"), str) and row["backend"], \
+        f"row {i}: calibration row needs a backend"
+    assert row.get("path") in KERNEL_PATHS, \
+        f"row {i}: path must be one of {sorted(KERNEL_PATHS)}"
+    for f in ("measured_s", "modeled_s", "ratio"):
+        v = row.get(f)
+        assert isinstance(v, (int, float)) and v > 0, \
+            f"row {i}: bad {f}={v!r}"
+    # the ratio is re-derived from the payload, never trusted as stored
+    expect = row["measured_s"] / row["modeled_s"]
+    assert abs(row["ratio"] - expect) <= 1e-6 * max(expect, 1.0), \
+        f"row {i}: ratio {row['ratio']!r} != measured/modeled {expect!r}"
+    assert CALIB_RATIO_MIN <= expect <= CALIB_RATIO_MAX, \
+        f"row {i}: {row['name']} measured/modeled ratio {expect:.3f} " \
+        f"outside [{CALIB_RATIO_MIN}, {CALIB_RATIO_MAX}]"
+    if "hbm_bytes_ratio" in row:
+        fused = row.get("hbm_bytes_fused")
+        unfused = row.get("hbm_bytes_unfused")
+        for f, v in (("hbm_bytes_fused", fused),
+                     ("hbm_bytes_unfused", unfused)):
+            assert isinstance(v, (int, float)) and v > 0, \
+                f"row {i}: bad {f}={v!r}"
+        hr = row["hbm_bytes_ratio"]
+        assert abs(hr - unfused / fused) <= 1e-6 * max(hr, 1.0), \
+            f"row {i}: hbm_bytes_ratio inconsistent with byte counts"
+        assert hr >= CALIB_HBM_RATIO_MIN, \
+            f"row {i}: {row['name']} moves only {hr:.2f}x fewer HBM " \
+            f"bytes than unfused (< {CALIB_HBM_RATIO_MIN}x)"
 
 
 def _check_multihop_exit(i: int, row: dict) -> None:
@@ -321,9 +399,16 @@ def validate(path: Path) -> list:
         assert isinstance(row, dict), f"row {i}: not an object"
         kind = row.get("kind", "multihop")
         assert kind in ("multihop", "multitenant", "planner", "batching",
-                        "routing", "bubbles"), f"row {i}: kind {kind!r}"
+                        "routing", "bubbles", "kernels", "calibration"), \
+            f"row {i}: kind {kind!r}"
         if kind == "planner":
             _check_planner(i, row)
+            continue
+        if kind == "kernels":
+            _check_kernels(i, row)
+            continue
+        if kind == "calibration":
+            _check_calibration(i, row)
             continue
         if kind == "bubbles":
             _check_bubbles(i, row)

@@ -31,7 +31,6 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.kernels import ops as KOPS
-from repro.kernels import ref as REF
 from repro.models import layers as L
 from repro.models import model as M
 from repro.models.config import ModelConfig
@@ -83,11 +82,14 @@ def _run_groups(groups, h, cfg: ModelConfig, positions):
 @dataclasses.dataclass
 class WirePacket:
     """Quantized boundary activation as transmitted over one hop."""
-    payload: jnp.ndarray  # uint8 (B,S,D*bits/8)
+    payload: jnp.ndarray  # uint8 (B,S,ceil(D*bits/8))
     scale: jnp.ndarray
     zp: jnp.ndarray
     bits: int
     hop: int = 0  # which link this packet crosses (0 = end's uplink)
+    # true channel count when the 4-bit payload carries an odd-D
+    # zero-nibble pad (None = the payload width is exact)
+    channels: Optional[int] = None
 
     @property
     def wire_bytes(self) -> int:
@@ -96,7 +98,19 @@ class WirePacket:
     def dequantize(self, out_dtype=jnp.float32) -> jnp.ndarray:
         return KOPS.dequantize_activation(
             self.payload, self.scale, self.zp, self.bits,
-            out_dtype=out_dtype)
+            out_dtype=out_dtype, channels=self.channels)
+
+
+@dataclasses.dataclass
+class BoundaryProbe:
+    """Semantic-probe outputs of one fused boundary pass (Eq. 8-9 on the
+    GAP feature, computed in the same HBM read that quantized the wire
+    packet).  ``best`` indexes into the ``centers`` matrix the pass was
+    given (the caller's trained-center view, not the full label space)."""
+    feat: jnp.ndarray  # (B, D) GAP features (feeds Eq. 7 center updates)
+    sep: jnp.ndarray   # (B,)  task separability (Eq. 9)
+    best: jnp.ndarray  # (B,)  int32 argmax similarity (Eq. 10)
+    sims: jnp.ndarray  # (B, L) similarity degrees in [0, 1] (Eq. 8)
 
 
 class CollabRuntime:
@@ -177,13 +191,23 @@ class CollabRuntime:
     def _quantize(self, h, hop: int, bits: Optional[int]) -> WirePacket:
         bits = bits or self.default_bits_per_hop[hop]
         payload, scale, zp = KOPS.quantize_activation(h, bits)
-        return WirePacket(payload, scale, zp, bits, hop=hop)
+        return WirePacket(payload, scale, zp, bits, hop=hop,
+                          channels=h.shape[-1])
 
-    def segment_step(self, k: int, x, bits: Optional[int] = None):
+    def segment_step(self, k: int, x, bits: Optional[int] = None,
+                     centers=None):
         """Run segment ``k``.  ``x`` is the raw model input for ``k = 0``,
         else the ``WirePacket`` delivered over hop ``k-1``.  Intermediate
         segments return ``(WirePacket for hop k, boundary activation)``;
-        the last segment returns the logits."""
+        the last segment returns the logits.
+
+        ``centers`` (an (L, D) trained-center matrix) switches an
+        intermediate segment to the *fused* boundary path: quantize +
+        pack + semantic probe in a single HBM read of the boundary
+        activation (``kernels.boundary``), returning ``(WirePacket,
+        BoundaryProbe)`` instead — the probe outputs replace the raw
+        activation, so nothing re-reads the fp32 tensor (which is donated
+        to the fused pass on accelerator backends)."""
         if k > 0:
             assert isinstance(x, WirePacket) and x.hop == k - 1, \
                 f"segment {k} consumes the hop-{k - 1} packet"
@@ -191,18 +215,38 @@ class CollabRuntime:
         h = self._seg_fns[k](self.p_segments[k], x)
         if k == self.n_hops:
             return h
+        if centers is not None:
+            bits = bits or self.default_bits_per_hop[k]
+            payload, scale, zp, feat, sep, best, sims = \
+                KOPS.boundary_pass(h, centers, bits)
+            pkt = WirePacket(payload, scale, zp, bits, hop=k,
+                             channels=self.cfg.d_model)
+            return pkt, BoundaryProbe(feat, sep, best, sims)
         return self._quantize(h, k, bits), h
 
-    def segment_handle(self, k: int):
+    def segment_handle(self, k: int, probe_centers=None, on_probe=None):
         """Bound per-segment callable for hop-queue workers.
 
         Worker ``k`` applies the handle to the payload it dequeued (the
         raw model input for ``k = 0``, else the hop-``k-1`` ``WirePacket``)
         and forwards the result: intermediate segments yield the hop-``k``
-        packet, the last segment yields the logits."""
+        packet, the last segment yields the logits.
+
+        ``probe_centers`` (a zero-arg callable returning the current
+        trained-center matrix for this boundary) switches intermediate
+        segments to the fused single-read path; each pass's
+        ``BoundaryProbe`` is delivered through ``on_probe(k, probe)`` —
+        the forwarded payload stays the plain ``WirePacket`` the next
+        hop-queue worker expects."""
         assert 0 <= k <= self.n_hops, k
 
         def handle(x, bits: Optional[int] = None):
+            if probe_centers is not None and k < self.n_hops:
+                pkt, probe = self.segment_step(k, x, bits=bits,
+                                               centers=probe_centers())
+                if on_probe is not None:
+                    on_probe(k, probe)
+                return pkt
             out = self.segment_step(k, x, bits=bits)
             return out[0] if isinstance(out, tuple) else out
 
@@ -213,6 +257,15 @@ class CollabRuntime:
                  ) -> Tuple[WirePacket, jnp.ndarray]:
         """Returns (hop-0 wire packet, boundary activation pre-quant)."""
         return self.segment_step(0, inputs, bits=bits)
+
+    def end_step_fused(self, inputs, centers, bits: Optional[int] = None
+                       ) -> Tuple[WirePacket, BoundaryProbe]:
+        """Fused end step: forward + quantize + pack + semantic probe
+        with a single HBM read of the boundary activation.  Returns the
+        hop-0 wire packet and the probe outputs (GAP feature included),
+        instead of the raw activation the classic ``end_step`` hands
+        back for a second probe read."""
+        return self.segment_step(0, inputs, bits=bits, centers=centers)
 
     def probe(self, h, centers):
         """Fused GAP+cosine+separability on the boundary activation."""
@@ -291,17 +344,18 @@ def make_collab_pipeline_step(cfg: ModelConfig, mesh, *, bits: int = 8,
                 h0 = M._embed(params, cfg, tok_mb).astype(dt)
                 h_in = jnp.where(pod == 0, h0, h_recv)
                 h = local_groups_fwd(groups[0], h_in, positions)
-                # quantize boundary + move across the pod axis (jnp
-                # reference semantics here: the Pallas interpret kernel
-                # cannot compile inside a manual shard_map region on the
-                # CPU dry-run backend; on TPU swap KOPS.quantize_activation
-                # back in — identical math, tested against it)
+                # quantize boundary + move across the pod axis through
+                # the shared trace-safe wire entry (KOPS.wire_*): the
+                # Pallas kernel on TPU, the exact jnp reference on
+                # backends where interpret-mode Pallas cannot compile
+                # inside a manual shard_map region — so the runtime,
+                # this SPMD pipeline, and the bench measure one path
                 flat = h.reshape(-1, cfg.d_model)
-                q, sc, zp = REF.uaq_quantize_ref(flat, bits)
+                q, sc, zp = KOPS.wire_quantize(flat, bits)
                 q, sc, zp = [lax.ppermute(x, "pod", [(0, 1)])
                              for x in (q, sc, zp)]
-                h_next = REF.uaq_dequantize_ref(
-                    q, sc, zp, bits, out_dtype=dt
+                h_next = KOPS.wire_dequantize(
+                    q, sc, zp, bits, out_dtype=dt, channels=cfg.d_model
                 ).reshape(B_mb, S, cfg.d_model)
                 done = jnp.where(pod == 1, h, jnp.zeros_like(h))
                 outs = lax.dynamic_update_index_in_dim(

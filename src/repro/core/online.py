@@ -138,6 +138,46 @@ class SemanticCache:
             sims[valid] = cosine(feat[None], self.centers[valid])[0]
         return sims
 
+    def trained_view(self) -> Tuple[np.ndarray, np.ndarray]:
+        """``(centers[counts > 0], their label indices)`` — the matrix a
+        fused boundary pass (``kernels.boundary``) probes against.  An
+        untrained center is all-zeros; its cosine against anything would
+        read ~0.5 after the [0, 1] mapping whereas ``similarities``
+        defines it as exactly 0, so the kernel only ever sees trained
+        centers and ``ProbeResult.from_fused`` scatters the results back
+        into the full label space."""
+        valid = np.flatnonzero(self.counts > 0)
+        return self.centers[valid], valid
+
+
+@dataclasses.dataclass
+class ProbeResult:
+    """One task's precomputed semantic-probe outputs (Eq. 8-10), e.g.
+    from the fused boundary pass, in the *full* label space of the cache
+    that will consume it.  ``OnlineScheduler.step`` / ``probe_hop``
+    accept it in place of recomputing similarities from the feature —
+    the decision math (thresholds, Eq. 11) is unchanged."""
+    sims: np.ndarray   # (n_labels,) similarity degrees; untrained = 0.0
+    sep: float         # Eq. 9 over the trained centers
+    best: int          # Eq. 10 argmax label (full label space)
+
+    @classmethod
+    def from_fused(cls, sims, sep, best, valid: np.ndarray,
+                   n_labels: int) -> "ProbeResult":
+        """Lift one task's fused-kernel outputs (computed against
+        ``cache.trained_view()`` centers) back into the full label
+        space.  ``valid`` is the trained-label index map; with fewer
+        than two trained centers there is no genuine second-highest
+        degree, so the separability is forced to 0 (never
+        exit-eligible), matching ``separability``."""
+        full = np.zeros(n_labels)
+        valid = np.asarray(valid)
+        if valid.size:
+            full[valid] = np.asarray(sims, dtype=float)
+        b = int(valid[int(best)]) if valid.size else 0
+        s = float(sep) if valid.size >= 2 else 0.0
+        return cls(sims=full, sep=s, best=b)
+
 
 @dataclasses.dataclass
 class Thresholds:
@@ -305,18 +345,36 @@ class OnlineScheduler:
                                    self.stage_compute[k + 1], levels=levels))
         return tuple(out)
 
-    def step(self, feat: np.ndarray, bandwidth_bps: Optional[float] = None
-             ) -> OnlineDecision:
+    def probe_centers(self, segment: int = 0
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """Trained-center view of the probe at ``segment`` (0 = the end
+        device's cache): the ``(centers, label index map)`` a fused
+        boundary pass runs against; lift its outputs back with
+        ``ProbeResult.from_fused``."""
+        cache = self.cache if segment == 0 \
+            else self.hop_probes[segment - 1].cache
+        return cache.trained_view()
+
+    def step(self, feat: np.ndarray, bandwidth_bps: Optional[float] = None,
+             probe: Optional[ProbeResult] = None) -> OnlineDecision:
+        """``probe`` supplies precomputed Eq. 8-10 outputs (the fused
+        boundary pass): the similarity/separability math is skipped —
+        one HBM read served both the wire packet and this decision —
+        while threshold logic and Eq. 7/11 run unchanged (``feat`` still
+        feeds the center updates)."""
         if bandwidth_bps is not None:
             self.observe_bandwidth(bandwidth_bps)
-        sims = self.cache.similarities(feat)
-        s = separability(sims, self.cache.counts)
+        if probe is not None:
+            sims, s = probe.sims, probe.sep
+        else:
+            sims = self.cache.similarities(feat)
+            s = separability(sims, self.cache.counts)
         # exit eligibility needs >= 2 warmed labels: with a single warm
         # center the separability statistic has no second-highest degree
         # and a cold cache must never terminate tasks (Eq. 9 over trained
         # centers only; see ``separability``)
         if self.cache.n_warm >= 2 and s > self.th.s_ext:
-            j = int(np.argmax(sims))  # Eq. 10
+            j = probe.best if probe is not None else int(np.argmax(sims))
             if self.update_centers:
                 self.cache.update(feat, j)
             return OnlineDecision(True, j, s, None, None)
@@ -326,29 +384,35 @@ class OnlineScheduler:
         return OnlineDecision(False, None, s, q_c, q_r)
 
     # -------------------------------------------------- hop-level probes
-    def probe_hop(self, segment: int, feat: np.ndarray) -> OnlineDecision:
+    def probe_hop(self, segment: int, feat: np.ndarray,
+                  probe: Optional[ProbeResult] = None) -> OnlineDecision:
         """Run the semantic probe of intermediate tier ``segment`` (>= 1)
         on its boundary activation: Eq. 8-10 against that tier's own
         centers and calibrated exit threshold.  On exit, the tier's
         centers refresh with the probe's own result (Eq. 7), exactly like
-        the end device's classic exit path."""
+        the end device's classic exit path.  ``probe`` supplies the
+        tier's fused-pass outputs in place of the recompute."""
         assert 1 <= segment <= len(self.hop_probes), \
             f"no probe calibrated for segment {segment}"
-        probe = self.hop_probes[segment - 1]
-        sims = probe.cache.similarities(feat)
-        s = separability(sims, probe.cache.counts)
-        if probe.cache.n_warm >= 2 and s > probe.thresholds.s_ext:
-            j = int(np.argmax(sims))  # Eq. 10 at tier ``segment``
+        hp = self.hop_probes[segment - 1]
+        if probe is not None:
+            sims, s = probe.sims, probe.sep
+        else:
+            sims = hp.cache.similarities(feat)
+            s = separability(sims, hp.cache.counts)
+        if hp.cache.n_warm >= 2 and s > hp.thresholds.s_ext:
+            j = probe.best if probe is not None else int(np.argmax(sims))
             if self.update_centers:
-                probe.cache.update(feat, j)
+                hp.cache.update(feat, j)
             return OnlineDecision(False, j, s, None, None,
                                   exit_hop=segment)
         return OnlineDecision(False, None, s, None,
-                              probe.thresholds.required_bits(s))
+                              hp.thresholds.required_bits(s))
 
     def step_cascade(self, hop_feats: Sequence[np.ndarray],
-                     bandwidth_bps: Optional[float] = None
-                     ) -> OnlineDecision:
+                     bandwidth_bps: Optional[float] = None,
+                     probes: Optional[Sequence[Optional[ProbeResult]]]
+                     = None) -> OnlineDecision:
         """Full hop-level decision cascade (SPINN-style progressive
         inference on the COACH probe): the classic end-device step first
         (exit / Eq. 11 uplink precision), then the intermediate tiers'
@@ -358,14 +422,20 @@ class OnlineScheduler:
         was still transmitted over hops ``0..k-1``.
 
         ``hop_feats[k]`` is the boundary activation feeding the probe at
-        segment ``k``; a shorter list reuses its last entry."""
+        segment ``k``; a shorter list reuses its last entry.  ``probes``
+        optionally carries one precomputed ``ProbeResult`` per segment
+        (fused boundary passes); a shorter list (or ``None`` entries)
+        falls back to recomputing from the features."""
         feat0 = hop_feats[0]
-        dec = self.step(feat0, bandwidth_bps=bandwidth_bps)
+        p0 = probes[0] if probes else None
+        dec = self.step(feat0, bandwidth_bps=bandwidth_bps, probe=p0)
         if dec.early_exit or not self.hop_probes:
             return dec
         for seg in range(1, len(self.hop_probes) + 1):
             feat = hop_feats[min(seg, len(hop_feats) - 1)]
-            hd = self.probe_hop(seg, feat)
+            pk = probes[seg] if probes is not None \
+                and seg < len(probes) else None
+            hd = self.probe_hop(seg, feat, probe=pk)
             if hd.exit_hop is not None:
                 return dataclasses.replace(
                     dec, result=hd.result, exit_hop=hd.exit_hop,

@@ -4,17 +4,30 @@
 boundary tensors (flattened to (tokens, channels)), and fall back to the
 pure-jnp reference for bit-widths outside the packed wire formats (the cost
 model still prices those; only 4/8-bit have a TPU wire kernel).
+
+``boundary_pass`` is the fused single-pass boundary hop (quantize + pack +
+probe in one HBM read, ``kernels.boundary``); off-TPU it dispatches to the
+exact jnp reference, and on accelerator backends the activation buffer is
+donated (the fused pass consumes it — nothing downstream reads the fp32
+tensor again).
+
+``wire_quantize`` / ``wire_dequantize`` are the *trace-safe* shared wire
+entry points: plain functions (no jit wrapper) that pick the Pallas kernel
+on TPU and the jnp reference elsewhere, so they can be traced inside
+``shard_map`` regions where interpret-mode Pallas cannot compile (see
+``core.collab.make_collab_pipeline_step``).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.boundary import fused_boundary
 from repro.kernels.uaq import uaq_dequantize, uaq_quantize
 from repro.kernels.semantic_cache import semantic_probe
 
@@ -27,7 +40,9 @@ def _as2d(x):
 
 @functools.partial(jax.jit, static_argnames=("bits", "use_kernel"))
 def quantize_activation(x, bits: int = 8, use_kernel: bool = True):
-    """(..., N) -> (packed (..., N*bits//8) uint8, scale, zp)."""
+    """(..., N) -> (packed (..., ceil(N*bits/8)) uint8, scale, zp).  An
+    odd N at 4 bits carries a zero-nibble pad; dequantize with
+    ``channels=N`` to slice back exactly."""
     x2, shape = _as2d(x)
     if use_kernel and bits in KERNEL_BITS:
         p, s, z = uaq_quantize(x2, bits)
@@ -37,16 +52,20 @@ def quantize_activation(x, bits: int = 8, use_kernel: bool = True):
     return (p.reshape(*lead, -1), s.reshape(*lead, 1), z.reshape(*lead, 1))
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "out_dtype", "use_kernel"))
+@functools.partial(jax.jit, static_argnames=("bits", "out_dtype",
+                                             "use_kernel", "channels"))
 def dequantize_activation(packed, scale, zp, bits: int = 8,
-                          out_dtype=jnp.float32, use_kernel: bool = True):
+                          out_dtype=jnp.float32, use_kernel: bool = True,
+                          channels: Optional[int] = None):
+    """``channels`` is the true channel count when the 4-bit payload was
+    packed from an odd N (defaults to the payload's full width)."""
     p2, shape = _as2d(packed)
     s2 = scale.reshape(-1, 1)
     z2 = zp.reshape(-1, 1)
     if use_kernel and bits in KERNEL_BITS:
-        x = uaq_dequantize(p2, s2, z2, bits, out_dtype)
+        x = uaq_dequantize(p2, s2, z2, bits, out_dtype, n=channels)
     else:
-        x = ref.uaq_dequantize_ref(p2, s2, z2, bits, out_dtype)
+        x = ref.uaq_dequantize_ref(p2, s2, z2, bits, out_dtype, n=channels)
     return x.reshape(*shape[:-1], -1)
 
 
@@ -54,3 +73,47 @@ def dequantize_activation(packed, scale, zp, bits: int = 8,
 def probe_cache(x, centers) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Fused GAP+cosine+separability.  x: (B,S,D); centers: (L,D)."""
     return semantic_probe(x, centers)
+
+
+# ------------------------------------------------- fused boundary pass
+@functools.lru_cache(maxsize=None)
+def _boundary_fn(bits: int, use_kernel: bool):
+    """Jitted fused-boundary entry, cached per (bits, path).  The
+    activation argument is donated on accelerator backends only: on CPU
+    XLA cannot alias the buffers and jit would warn on every call."""
+    def f(x, centers):
+        if use_kernel and bits in KERNEL_BITS \
+                and jax.default_backend() == "tpu":
+            return fused_boundary(x, centers, bits)
+        return ref.fused_boundary_ref(x, centers, bits)
+    donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+    return jax.jit(f, donate_argnums=donate)
+
+
+def boundary_pass(x, centers, bits: int = 8, use_kernel: bool = True):
+    """Single-pass fused boundary hop: x (B,S,D), centers (L,D) ->
+    (payload, scale, zp, feat, sep, best, sims).  One HBM read of ``x``
+    produces the wire packet fields *and* the semantic-probe outputs;
+    ``x`` is donated on TPU/GPU (do not reuse it after this call)."""
+    return _boundary_fn(int(bits), bool(use_kernel))(x, centers)
+
+
+# ------------------------------------------- trace-safe wire entry points
+def wire_quantize(x, bits: int):
+    """Shared wire quantize entry: Pallas kernel on TPU, exact jnp
+    reference elsewhere.  Plain function — safe to trace inside
+    ``shard_map``/``jit`` regions on any backend (interpret-mode Pallas
+    cannot compile there), so the runtime, the SPMD pipeline, and the
+    bench all measure the same code path."""
+    if jax.default_backend() == "tpu" and bits in KERNEL_BITS:
+        return uaq_quantize(x, bits)
+    return ref.uaq_quantize_ref(x, bits)
+
+
+def wire_dequantize(packed, scale, zp, bits: int, out_dtype=jnp.float32,
+                    channels: Optional[int] = None):
+    if jax.default_backend() == "tpu" and bits in KERNEL_BITS:
+        return uaq_dequantize(packed, scale, zp, bits, out_dtype,
+                              n=channels)
+    return ref.uaq_dequantize_ref(packed, scale, zp, bits, out_dtype,
+                                  n=channels)

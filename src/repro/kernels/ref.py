@@ -26,16 +26,26 @@ def uaq_rowwise_ref(x: jnp.ndarray, bits: int):
 
 
 def pack4_ref(q: jnp.ndarray) -> jnp.ndarray:
-    """Pack uint4 values (M, N even) -> (M, N//2) bytes, little-nibble first."""
-    lo = q[:, 0::2].astype(jnp.uint8)
-    hi = q[:, 1::2].astype(jnp.uint8)
+    """Pack uint4 values (..., N) -> (..., ceil(N/2)) bytes, little-nibble
+    first.  An odd channel count is zero-nibble padded: the pad lives in
+    the *quantized* domain (a spare high nibble of the last byte), so the
+    row's scale/zero-point — computed on the true N values — are untouched
+    and ``unpack4_ref(..., n=N)`` recovers the row exactly."""
+    if q.shape[-1] % 2:
+        q = jnp.concatenate(
+            [q, jnp.zeros_like(q[..., :1])], axis=-1)
+    lo = q[..., 0::2].astype(jnp.uint8)
+    hi = q[..., 1::2].astype(jnp.uint8)
     return lo | (hi << 4)
 
 
-def unpack4_ref(p: jnp.ndarray) -> jnp.ndarray:
+def unpack4_ref(p: jnp.ndarray, n: int | None = None) -> jnp.ndarray:
+    """Unpack nibbles (..., P) -> (..., 2P), sliced to the true channel
+    count ``n`` when the producer zero-padded an odd N."""
     lo = p & 0xF
     hi = p >> 4
-    return jnp.stack([lo, hi], axis=-1).reshape(p.shape[0], -1)
+    q = jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], -1)
+    return q if n is None else q[..., :n]
 
 
 def uaq_quantize_ref(x, bits: int):
@@ -45,9 +55,53 @@ def uaq_quantize_ref(x, bits: int):
     return q, scale, zp
 
 
-def uaq_dequantize_ref(packed, scale, zp, bits: int, out_dtype=jnp.float32):
-    q = unpack4_ref(packed) if bits == 4 else packed
+def uaq_dequantize_ref(packed, scale, zp, bits: int, out_dtype=jnp.float32,
+                       n: int | None = None):
+    q = unpack4_ref(packed, n=n) if bits == 4 else packed
     return ((q.astype(jnp.float32) - zp) * scale).astype(out_dtype)
+
+
+# ------------------------------------------------------ fused boundary ref
+def fused_boundary_ref(x: jnp.ndarray, centers: jnp.ndarray, bits: int):
+    """Exact jnp mirror of ``boundary.fused_boundary`` (the single-pass
+    quantize -> pack -> probe kernel): same expression sequence, so the
+    kernel is pinned bit-for-bit in interpret mode.
+
+    x: (B, S, D) boundary activation; centers: (L, D).  Returns
+    (payload (B,S,P) uint8, scale (B,S,1), zp (B,S,1), feat (B,D),
+    sep (B,), best (B,) int32, sims (B,L)) — the per-token wire packet
+    fields plus the per-task GAP feature and probe outputs, from one
+    logical read of ``x``."""
+    B, S, D = x.shape
+    qmax = float((1 << bits) - 1)
+    xf = x.astype(jnp.float32)
+    lo = jnp.min(xf, axis=2, keepdims=True)
+    hi = jnp.max(xf, axis=2, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-8) / qmax
+    zp = jnp.round(-lo / scale)
+    q = jnp.clip(jnp.round(xf / scale + zp), 0.0, qmax).astype(jnp.int32)
+    if bits == 4:
+        if D % 2:
+            q = jnp.concatenate([q, jnp.zeros_like(q[..., :1])], axis=-1)
+        payload = ((q[..., 0::2] | (q[..., 1::2] << 4))).astype(jnp.uint8)
+    else:
+        payload = q.astype(jnp.uint8)
+    f = jnp.sum(xf, axis=1) / S  # GAP (sum-then-divide, like the kernel)
+    fn = f / jnp.maximum(
+        jnp.sqrt(jnp.sum(f * f, axis=1, keepdims=True)), 1e-12)
+    c = centers.astype(jnp.float32)
+    cn = c / jnp.maximum(
+        jnp.sqrt(jnp.sum(c * c, axis=1, keepdims=True)), 1e-12)
+    sims = (jnp.dot(fn, cn.T, preferred_element_type=jnp.float32)
+            + 1.0) * 0.5  # Eq. 8 -> [0,1]
+    L = sims.shape[1]
+    t_h = jnp.max(sims, axis=1)
+    best = jnp.argmax(sims, axis=1).astype(jnp.int32)
+    onehot = best[:, None] == jnp.arange(L, dtype=jnp.int32)[None, :]
+    t_sh = jnp.max(jnp.where(onehot, -jnp.inf, sims), axis=1)
+    norm = jnp.sqrt(jnp.sum(sims * sims, axis=1))
+    sep = norm * (t_h - t_sh) * t_h / jnp.maximum(t_sh, 1e-12)  # Eq. 9
+    return payload, scale, zp, f, sep, best, sims
 
 
 # ------------------------------------------------------- semantic cache ref

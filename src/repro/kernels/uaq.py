@@ -33,6 +33,11 @@ def _quant_kernel(x_ref, out_ref, scale_ref, zp_ref, *, bits: int):
     zp = jnp.round(-lo / scale)
     q = jnp.clip(jnp.round(x / scale + zp), 0.0, qmax).astype(jnp.int32)
     if bits == 4:
+        if q.shape[1] % 2:
+            # odd channel count: pad one zero *nibble* (quantized domain),
+            # so scale/zp — computed on the true N values above — are
+            # untouched; the consumer slices back with the true N
+            q = jnp.concatenate([q, jnp.zeros_like(q[:, :1])], axis=1)
         lo_nib = q[:, 0::2]
         hi_nib = q[:, 1::2]
         out_ref[...] = (lo_nib | (hi_nib << 4)).astype(jnp.uint8)
@@ -43,13 +48,13 @@ def _quant_kernel(x_ref, out_ref, scale_ref, zp_ref, *, bits: int):
 
 
 def _dequant_kernel(p_ref, scale_ref, zp_ref, out_ref, *, bits: int,
-                    out_dtype):
+                    out_dtype, n: int):
     p = p_ref[...].astype(jnp.int32)
     if bits == 4:
         lo = p & 0xF
         hi = p >> 4
         bm, half = p.shape
-        q = jnp.stack([lo, hi], axis=-1).reshape(bm, half * 2)
+        q = jnp.stack([lo, hi], axis=-1).reshape(bm, half * 2)[:, :n]
     else:
         q = p
     x = (q.astype(jnp.float32) - zp_ref[...]) * scale_ref[...]
@@ -58,15 +63,16 @@ def _dequant_kernel(p_ref, scale_ref, zp_ref, out_ref, *, bits: int,
 
 def uaq_quantize(x: jnp.ndarray, bits: int, block_m: int = 256,
                  interpret: bool | None = None):
-    """x: (M, N) -> (packed (M, N*bits//8) uint8, scale (M,1), zp (M,1))."""
+    """x: (M, N) -> (packed (M, ceil(N*bits/8)) uint8, scale (M,1),
+    zp (M,1)).  An odd N at 4 bits is zero-nibble padded in the packed
+    payload; pass ``n=N`` to ``uaq_dequantize`` to slice back exactly."""
     assert bits in (4, 8), "wire format supports int4 (packed) and int8"
     M, N = x.shape
-    assert bits != 4 or N % 2 == 0
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     bm = min(block_m, M)
     assert M % bm == 0, f"M={M} % block_m={bm}"
-    n_out = N * bits // 8
+    n_out = (N + 1) // 2 if bits == 4 else N
     grid = (M // bm,)
     return pl.pallas_call(
         functools.partial(_quant_kernel, bits=bits),
@@ -88,17 +94,21 @@ def uaq_quantize(x: jnp.ndarray, bits: int, block_m: int = 256,
 
 def uaq_dequantize(packed: jnp.ndarray, scale: jnp.ndarray, zp: jnp.ndarray,
                    bits: int, out_dtype=jnp.float32, block_m: int = 256,
-                   interpret: bool | None = None):
+                   interpret: bool | None = None, n: int | None = None):
+    """``n`` is the true channel count when the 4-bit payload carries an
+    odd-N zero-nibble pad (defaults to the payload's full width)."""
     assert bits in (4, 8)
     M, n_in = packed.shape
-    N = n_in * 8 // bits
+    N = n if n is not None else n_in * 8 // bits
+    assert N <= n_in * 8 // bits
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     bm = min(block_m, M)
     assert M % bm == 0
     grid = (M // bm,)
     return pl.pallas_call(
-        functools.partial(_dequant_kernel, bits=bits, out_dtype=out_dtype),
+        functools.partial(_dequant_kernel, bits=bits, out_dtype=out_dtype,
+                          n=N),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, n_in), lambda i: (i, 0)),

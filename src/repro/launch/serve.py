@@ -14,11 +14,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config
+from repro.core import online as ON
 from repro.core.collab import CollabRuntime
 from repro.core.costs import (A6000_SERVER, JETSON_NX, WIFI_5GHZ,
                               transformer_graph)
 from repro.core.partitioner import coach_offline
-from repro.data.pipeline import CorrelatedTaskStream, make_calibration_set
+from repro.data.pipeline import CorrelatedTaskStream
 from repro.models import model as M
 from repro.obs.bubbles import attribute, chain_resources
 from repro.obs.export import text_summary
@@ -46,10 +47,27 @@ def serve(arch: str, *, smoke: bool = True, requests: int = 200,
                     cfg.num_groups - 1)
     rt = CollabRuntime(cfg, params, cut_group)
 
-    # ---- online component: semantic cache fed by real boundary features
+    # ---- online component: semantic cache keyed on *real* boundary GAP
+    # features (the exact features the fused boundary pass emits), so the
+    # fused probe's Eq. 8-10 outputs are consistent with the cache state
     stream = CorrelatedTaskStream(n_labels=16, dim=cfg.d_model,
                                   correlation=correlation, seed=seed)
-    feats, labels = make_calibration_set(stream, n=300)
+
+    def task_input(task):
+        if cfg.embed_inputs:
+            return jnp.asarray(np.tile(task.features[None, None, :],
+                                       (1, 8, 1)), jnp.float32)
+        toks = (np.abs((task.features[:8] * 1000).astype(np.int64))
+                % cfg.vocab_size).astype(np.int32)
+        return jnp.asarray(toks)[None]
+
+    calib_tasks = stream.tasks(300)
+    calib_inp = jnp.concatenate([task_input(t) for t in calib_tasks], axis=0)
+    h_calib = rt._seg_fns[0](rt.p_end, calib_inp)
+    # same sum/seq_len GAP expression as kernels.boundary's epilogue
+    feats = np.asarray(jnp.sum(h_calib.astype(jnp.float32), axis=1)
+                       / h_calib.shape[1])
+    labels = np.asarray([t.label for t in calib_tasks])
     rec = TraceRecorder()
     engine = CoachEngine(rt, off.times, JETSON_NX, link, A6000_SERVER,
                          n_labels=16, calib_feats=feats, calib_labels=labels,
@@ -57,19 +75,19 @@ def serve(arch: str, *, smoke: bool = True, requests: int = 200,
                          cfg=EngineConfig(trace=rec))
 
     def classify(task):
-        # run the real end segment on the task; its quantized boundary goes
-        # to the cloud segment; the semantic cache is keyed on the frontend
-        # features (GAP of the modality encoder output)
-        if cfg.embed_inputs:
-            inp = jnp.asarray(np.tile(task.features[None, None, :],
-                                      (1, 8, 1)), jnp.float32)
-        else:
-            toks = (np.abs((task.features[:8] * 1000).astype(np.int64))
-                    % cfg.vocab_size).astype(np.int32)
-            inp = jnp.asarray(toks)[None]
-        pkt, _h = rt.end_step(inp)
+        # fused boundary path: the end segment's forward + quantize +
+        # pack + semantic probe read the boundary activation once; the
+        # probe outputs (against the cache's current trained centers)
+        # feed the scheduler directly instead of a second GAP/cosine pass
+        centers, valid = engine.sched.probe_centers()
+        pkt, probe = rt.end_step_fused(
+            task_input(task), jnp.asarray(centers, jnp.float32))
         logits = rt.cloud_step(pkt)
-        return task.features, int(np.argmax(logits[0]) % stream.n_labels)
+        pr = ON.ProbeResult.from_fused(
+            probe.sims[0], probe.sep[0], probe.best[0], valid,
+            n_labels=stream.n_labels)
+        return (np.asarray(probe.feat[0]),
+                int(np.argmax(logits[0]) % stream.n_labels), pr)
 
     tasks = stream.tasks(requests)
     t0 = time.time()

@@ -33,6 +33,14 @@ differential test ``tests/test_async_engine.py`` pins):
   trace re-integration   the link worker reprices the planned bit
                          volume with ``LinkProfile.transfer_time`` at
                          the transfer's actual virtual start
+  boundary quantize +    the fused single-pass boundary kernel
+  semantic probe         (``kernels.boundary`` via ``CollabRuntime.
+  (priced inside         segment_handle(probe_centers=)``): worker
+  ``compute[k]``)        ``k``'s segment forward emits the hop-``k``
+                         wire packet *and* the ``BoundaryProbe`` in one
+                         HBM read of the activation; the lifted
+                         ``ProbeResult`` feeds the enqueue-time
+                         decision in place of the scheduler's recompute
   =====================  ==========================================
 
 With ``pools=`` the chain generalizes to *replicated tiers*
@@ -75,7 +83,10 @@ decisions (early exit Eq. 10, adaptive precision Eq. 11) are made at
 enqueue time on the end worker, in task order — concurrency never changes
 *decisions*, only timing — and per-hop adaptive bits pick a precision per
 ``WirePacket`` hop from per-hop bandwidth EMAs
-(``OnlineScheduler.choose_hop_bits``).
+(``OnlineScheduler.choose_hop_bits``).  ``classify`` may return a
+3-tuple ``(features, pred, probes)`` carrying the fused boundary pass's
+precomputed ``ProbeResult``(s); the cascade consumes them directly
+(``EngineBase.decide``), so no engine re-reads the boundary activation.
 
 Multi-tenant admission lives one layer up in ``repro.serving.tenancy``:
 ``AsyncHopPipeline.run`` accepts a pluggable admitter (``admit_fn``)

@@ -218,13 +218,27 @@ class EngineBase:
         (CollabRuntime) or a proxy; ``features`` may be a single vector
         or a per-boundary ``(n_probes, dim)`` stack (hop-level exits).
         Identical call sequence in every engine, so a seeded stream
-        yields identical decisions."""
-        feats, pred = classify(task)
+        yields identical decisions.
+
+        A classifier on the fused boundary path returns a third element:
+        ``(features, predicted_label, probes)``, where ``probes`` is one
+        ``online.ProbeResult`` per boundary (or a single one for the
+        classic end-only probe).  The scheduler then consumes the
+        precomputed Eq. 8-10 outputs instead of re-deriving similarities
+        from the features — the single HBM read that quantized the wire
+        packet also decided the task."""
+        out = classify(task)
+        feats, pred = out[0], out[1]
+        probes = out[2] if len(out) > 2 else None
+        if probes is not None and isinstance(probes, ON.ProbeResult):
+            probes = (probes,)
         hop_feats = self._hop_feats(feats)
         if self.sched.hop_probes:
-            dec = self.sched.step_cascade(hop_feats, bandwidth_bps=bw)
+            dec = self.sched.step_cascade(hop_feats, bandwidth_bps=bw,
+                                          probes=probes)
         else:
-            dec = self.sched.step(hop_feats[0], bandwidth_bps=bw)
+            dec = self.sched.step(hop_feats[0], bandwidth_bps=bw,
+                                  probe=probes[0] if probes else None)
         return dec, feats, pred
 
     def plan_for(self, dec: ON.OnlineDecision, bw: float,

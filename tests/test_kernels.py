@@ -8,6 +8,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
+from repro.kernels.boundary import fused_boundary
 from repro.kernels.uaq import uaq_dequantize, uaq_quantize
 from repro.kernels.semantic_cache import semantic_probe
 
@@ -88,3 +89,78 @@ def test_probe_sims_in_range():
     c = jax.random.normal(jax.random.PRNGKey(4), (12, 64))
     _, _, sims = ops.probe_cache(x, c)
     assert float(jnp.min(sims)) >= -1e-6 and float(jnp.max(sims)) <= 1 + 1e-6
+
+
+@given(st.integers(1, 32), st.integers(1, 129), st.sampled_from([4, 8]),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_uaq_roundtrip_error_property(m, n, bits, seed):
+    """Quantize -> dequantize through the shared entry points stays
+    within half a quantum per element, for random shapes including odd
+    channel counts at int4 (zero-nibble pad + true-N slice)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, n)) * 5.0
+    p, s, z = ops.quantize_activation(x, bits, use_kernel=False)
+    assert p.shape == (m, (n + 1) // 2 if bits == 4 else n)
+    y = ops.dequantize_activation(p, s, z, bits, use_kernel=False,
+                                  channels=n)
+    assert y.shape == x.shape
+    err = np.abs(np.asarray(y) - np.asarray(x))
+    # degenerate (constant) rows hit the 1e-8 scale floor, where zp's
+    # float32 rounding granularity dominates — hence the absolute slack
+    bound = np.asarray(s) * 0.5 * (1 + 1e-3) + 1e-6
+    assert (err <= bound).all()
+
+
+@pytest.mark.parametrize("N", [5, 129, 255])
+def test_uaq_int4_odd_channels_kernel(N):
+    """Regression: the int4 wire kernel accepts odd channel counts (pad
+    lives in the packed payload only; scale/zp are exact on the true N)."""
+    x = jax.random.normal(jax.random.PRNGKey(7), (16, N)) * 2.0
+    p, s, z = uaq_quantize(x, 4, interpret=True)
+    assert p.shape == (16, (N + 1) // 2)
+    pr, sr, zr = ref.uaq_quantize_ref(x, 4)
+    np.testing.assert_allclose(s, sr, rtol=1e-6)
+    np.testing.assert_allclose(z, zr, atol=1)
+    y = uaq_dequantize(p, s, z, 4, n=N, interpret=True)
+    assert y.shape == x.shape
+    err = np.abs(np.asarray(y) - np.asarray(x))
+    assert (err <= np.asarray(s) * 0.5 * (1 + 1e-3)).all()
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("B,S,D,L", [(4, 64, 128, 10), (8, 512, 256, 37),
+                                     (2, 100, 65, 5), (1, 1, 32, 3)])
+def test_fused_boundary_equals_composition(B, S, D, L, bits):
+    """The single-pass fused boundary kernel reproduces the two-pass
+    composition (uaq_quantize over tokens + semantic_probe over the
+    activation) it replaces, in interpret mode."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, S, D))
+    c = jax.random.normal(jax.random.PRNGKey(1), (L, D))
+    payload, scale, zp, feat, sep, best, sims = \
+        fused_boundary(x, c, bits, interpret=True)
+    # --- wire half: per-token UAQ quantize + pack
+    p_u, s_u, z_u = uaq_quantize(x.reshape(B * S, D), bits, interpret=True)
+    np.testing.assert_allclose(scale.reshape(-1, 1), s_u, rtol=1e-6)
+    q = ref.unpack4_ref(payload.reshape(B * S, -1)) if bits == 4 \
+        else payload.reshape(B * S, -1)
+    q_u = ref.unpack4_ref(p_u) if bits == 4 else p_u
+    diff = np.abs(q.astype(np.int32) - q_u.astype(np.int32))
+    assert diff.max() <= 1  # 1-ulp scale ties, as in the unfused sweep
+    assert (diff != 0).mean() < 1e-3
+    # --- probe half: GAP + cosine + top-2 separability
+    sep_p, best_p, sims_p = semantic_probe(x, c, interpret=True)
+    np.testing.assert_array_equal(best, best_p)
+    np.testing.assert_allclose(sims, sims_p, atol=1e-5)
+    np.testing.assert_allclose(sep, sep_p, rtol=1e-4, atol=1e-5)
+    # --- and bit-for-bit against the jitted exact reference on the wire
+    # fields (the runtime's off-TPU fallback path)
+    jref = jax.jit(lambda a, b: ref.fused_boundary_ref(a, b, bits))
+    pr, sr, zr, fr, sep_r, best_r, sims_r = jref(x, c)
+    np.testing.assert_array_equal(np.asarray(payload), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(scale), np.asarray(sr))
+    np.testing.assert_array_equal(np.asarray(zp), np.asarray(zr))
+    np.testing.assert_array_equal(np.asarray(best), np.asarray(best_r))
+    if S <= 512:  # single S block: GAP accumulation order matches too
+        np.testing.assert_array_equal(np.asarray(feat), np.asarray(fr))
+        np.testing.assert_array_equal(np.asarray(sims), np.asarray(sims_r))
+        np.testing.assert_array_equal(np.asarray(sep), np.asarray(sep_r))
