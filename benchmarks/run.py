@@ -16,8 +16,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 from benchmarks import (ablation, arch_partition, batching, bubbles,
                         calibration, fig1_locality, fig2_schemes,
                         fig5_dynamic, fig6_fig7_bandwidth, kernels_bench,
-                        multihop, multitenant, planner, roofline, routing,
-                        table1_latency, table2_context)
+                        multihop, multitenant, planner, resilience,
+                        roofline, routing, table1_latency, table2_context)
 
 MODULES = {
     "fig1": fig1_locality,
@@ -38,6 +38,7 @@ MODULES = {
     "batching": batching,        # micro-batched vs unbatched paired rows
     "routing": routing,          # replicated-tier throughput-vs-m sweeps
     "bubbles": bubbles,          # per-cause idle attribution, pinned+gated
+    "resilience": resilience,    # churn/degrade storylines, replan gated
     "roofline": roofline,
 }
 

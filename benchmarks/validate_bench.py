@@ -127,7 +127,7 @@ BUBBLE_CONS_TOL_S = 1e-9
 BUBBLE_CAUSES = {
     "warmup", "drain", "upstream_starvation", "downstream_backpressure",
     "batch_formation", "sequencer_reorder", "ingress_credit",
-    "exit_released",
+    "exit_released", "replanning",
 }
 BUBBLE_CONFIGS = {"chain", "exits", "pool"}
 #: dispatch paths a kernels microbenchmark row may have taken
@@ -143,6 +143,15 @@ CALIB_RATIO_MAX = float(os.environ.get("COACH_CALIB_RATIO_MAX", "50.0"))
 #: read instead of two)
 CALIB_HBM_RATIO_MIN = 1.5
 ENGINES = {"sim", "async"}
+#: resilience storylines and their variants (see benchmarks.resilience)
+RESILIENCE_STORYLINES = {"degrade": {"static", "replan"},
+                         "churn": {"jsq-avail"}}
+#: the scenario runner's differential tolerance on task completions
+RESILIENCE_PIN_TOL_S = 1e-6
+#: a degrade storyline must re-plan at least once and stay bounded
+#: (a runaway detector thrashing the planner is a bug, not resilience)
+RESILIENCE_REPLANS_MAX = 10
+RESILIENCE_TPUT_TOL = 1 - 1e-9
 POLICIES = {"fifo", "rr", "wdrr"}
 ROUTER_POLICIES = {"jsq", "po2", "random"}
 #: policies the m=2 scale-out gate applies to (random is the
@@ -346,6 +355,75 @@ def _check_bubbles(i: int, row: dict) -> None:
             f"[0, {BUBBLE_OVERHEAD_MAX}]"
 
 
+def _check_resilience(i: int, row: dict) -> None:
+    assert isinstance(row.get("model"), str) and row["model"], f"row {i}"
+    assert isinstance(row.get("hops"), int) and row["hops"] >= 2, \
+        f"row {i}: bad hops"
+    assert row.get("engine") in ENGINES, \
+        f"row {i}: engine must be one of {sorted(ENGINES)}"
+    story = row.get("storyline")
+    assert story in RESILIENCE_STORYLINES, \
+        f"row {i}: storyline must be one of {sorted(RESILIENCE_STORYLINES)}"
+    assert row.get("variant") in RESILIENCE_STORYLINES[story], \
+        f"row {i}: variant {row.get('variant')!r} invalid for {story}"
+    _check_numeric(i, row, ("n_tasks", "p50_ms", "p99_ms",
+                            "throughput_its", "makespan_ms"))
+    w = row.get("window")
+    assert isinstance(w, list) and len(w) == 2 and 0 <= w[0] < w[1], \
+        f"row {i}: bad window {w!r}"
+    for f in ("n_replans", "n_migrations"):
+        assert isinstance(row.get(f), int) and row[f] >= 0, \
+            f"row {i}: bad {f}"
+    # the pin evidence: traces matched and completions agreed to 1e-6
+    assert row.get("trace_match") is True, \
+        f"row {i}: trace_match must be true (sim/async span pin)"
+    d = row.get("max_done_delta_s")
+    assert isinstance(d, (int, float)) and \
+        0 <= d <= RESILIENCE_PIN_TOL_S, \
+        f"row {i}: max_done_delta_s {d!r} > {RESILIENCE_PIN_TOL_S}"
+    err = row.get("conservation_max_err_s")
+    assert isinstance(err, (int, float)) and \
+        0 <= err <= BUBBLE_CONS_TOL_S, \
+        f"row {i}: conservation_max_err_s {err!r} > {BUBBLE_CONS_TOL_S}"
+    causes = row.get("bubble_causes_ms")
+    assert isinstance(causes, dict), f"row {i}: missing bubble_causes_ms"
+    for label, cs in causes.items():
+        assert isinstance(cs, dict) and set(cs) <= BUBBLE_CAUSES, \
+            f"row {i}: unknown bubble cause in {label}: " \
+            f"{sorted(set(cs) - BUBBLE_CAUSES)}"
+    if row["variant"] == "replan":
+        assert 1 <= row["n_replans"] <= RESILIENCE_REPLANS_MAX, \
+            f"row {i}: replan variant with n_replans={row['n_replans']}"
+        assert row["n_migrations"] >= 1, \
+            f"row {i}: replan variant migrated no in-flight task"
+        p99w = row.get("p99_window_ms")
+        assert isinstance(p99w, (int, float)) and p99w > 0, \
+            f"row {i}: bad p99_window_ms"
+    else:
+        assert row["n_replans"] == 0 and row["n_migrations"] == 0, \
+            f"row {i}: static/churn variant must not re-plan"
+
+
+def _check_resilience_pairs(rows: dict) -> None:
+    """The resilience gate: per (model, hops, engine) degrade pair,
+    online re-planning must deliver strictly better p99 through the
+    degraded window at equal-or-better throughput than the static
+    plan riding the identical traced links."""
+    for key, variants in sorted(rows.items()):
+        assert set(variants) == {"static", "replan"}, \
+            f"resilience {key}: needs paired static/replan rows " \
+            f"(got {sorted(variants)})"
+        st, rp = variants["static"], variants["replan"]
+        assert rp["p99_window_ms"] < st["p99_window_ms"], \
+            f"resilience {key}: replan p99 {rp['p99_window_ms']:.2f}ms " \
+            f"not better than static {st['p99_window_ms']:.2f}ms"
+        assert rp["throughput_its"] >= \
+            st["throughput_its"] * RESILIENCE_TPUT_TOL, \
+            f"resilience {key}: replan throughput " \
+            f"{rp['throughput_its']:.2f}/s below static " \
+            f"{st['throughput_its']:.2f}/s"
+
+
 def _check_routing_sweeps(rows: dict) -> None:
     """The scale-out gate: for the informed policies, m = 2 must deliver
     >= 1.8x the m = 1 throughput at equal-or-better p99, per
@@ -390,17 +468,21 @@ def validate(path: Path) -> list:
     data = json.loads(path.read_text())
     assert isinstance(data, list) and data, "payload must be a non-empty list"
     mh_seen, mt_seen, bt_seen, rt_seen = set(), set(), set(), set()
-    bb_seen = set()
+    bb_seen, rs_seen = set(), set()
     mh_exit = {}
     mt_runs = {}
     bt_pairs = {}
     rt_sweeps = {}
+    rs_pairs = {}
     for i, row in enumerate(data):
         assert isinstance(row, dict), f"row {i}: not an object"
         kind = row.get("kind", "multihop")
+        # fail on unknown kinds: a producer emitting rows the validator
+        # does not understand must extend the validator, not slip past it
         assert kind in ("multihop", "multitenant", "planner", "batching",
-                        "routing", "bubbles", "kernels", "calibration"), \
-            f"row {i}: kind {kind!r}"
+                        "routing", "bubbles", "kernels", "calibration",
+                        "resilience"), \
+            f"row {i}: unknown row kind {kind!r} in merged artifact"
         if kind == "planner":
             _check_planner(i, row)
             continue
@@ -414,6 +496,17 @@ def validate(path: Path) -> list:
             _check_bubbles(i, row)
             bb_seen.add((row["model"], row["hops"], row["config"],
                          row["engine"]))
+            continue
+        if kind == "resilience":
+            _check_resilience(i, row)
+            key = (row["model"], row["hops"], row["storyline"],
+                   row["variant"], row["engine"])
+            assert key not in rs_seen, \
+                f"row {i}: duplicate resilience row for {key}"
+            rs_seen.add(key)
+            if row["storyline"] == "degrade":
+                pkey = (row["model"], row["hops"], row["engine"])
+                rs_pairs.setdefault(pkey, {})[row["variant"]] = row
             continue
         _check_common(i, row)
         if kind == "routing":
@@ -476,6 +569,9 @@ def validate(path: Path) -> list:
         _check_routing_sweeps(rt_sweeps)
     if bb_seen:
         _require_both_engines(bb_seen, "bubbles")
+    if rs_seen:
+        _require_both_engines(rs_seen, "resilience")
+        _check_resilience_pairs(rs_pairs)
     return data
 
 

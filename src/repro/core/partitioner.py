@@ -284,7 +284,9 @@ def coach_offline_multihop(graph: ModelGraph,
                            min_end_nodes: int = 1,
                            chain_stride: int = 1,
                            fast: bool = True,
-                           shortlist_k: int = 16) -> OfflineResult:
+                           shortlist_k: int = 16,
+                           tables: Optional[plan_fast.PlannerTables] = None
+                           ) -> OfflineResult:
     """Algorithm 1 offline component over an ``len(links)``-hop chain of
     devices (end, edge tiers..., cloud).
 
@@ -303,7 +305,16 @@ def coach_offline_multihop(graph: ModelGraph,
     only the top-``shortlist_k`` candidates per phase are rescored with
     the full event simulator — the returned decision and objective are
     identical to ``fast=False``, which keeps the naive per-candidate
-    simulation sweep (links with bandwidth traces fall back to it too).
+    simulation sweep.  Links carrying a bandwidth trace stay on the fast
+    path: the batched scorer re-prices every boundary transfer at its
+    actual start instant (exhaustive exact sweep, no vectorized bounds).
+
+    ``tables`` warm-starts the fast path with previously built
+    ``PlannerTables`` — they must come from ``plan_fast.build_tables``
+    (with chain prefixes) or ``plan_fast.retime_tables`` over this same
+    graph, device tuple and quantization search, and their bandwidths
+    must match ``links``.  Online re-planning passes retimed tables so a
+    regime shift never re-runs the Eq. 1 oracle pricing.
     """
     n_hops = len(links)
     assert len(devices) == n_hops + 1, "need one device per segment"
@@ -312,9 +323,12 @@ def coach_offline_multihop(graph: ModelGraph,
     qcache = QuantCache(graph, eps, oracle)
     n_cands = 0
     best: Optional[Tuple] = None
-    use_fast = (fast and len(graph) > 0
-                and all(lk.trace is None for lk in links))
-    tables: Optional[plan_fast.PlannerTables] = None
+    use_fast = fast and len(graph) > 0
+    if tables is not None:
+        assert (tables.graph is graph and len(tables.links) == n_hops
+                and tables.pref_cnt is not None
+                and tables.bw == tuple(lk.bandwidth_bps for lk in links)), \
+            "warm tables must be built/retimed for this graph and links"
 
     def get_tables() -> plan_fast.PlannerTables:
         nonlocal tables
@@ -447,7 +461,7 @@ def brute_force(graph: ModelGraph, end_dev, cloud_dev, link,
         if best is None or key < (not best[3], best[2]):
             best = (dec, st, obj, feas)
 
-    if fast and link.trace is None and len(end_sets) > shortlist_k:
+    if fast and len(end_sets) > shortlist_k:
         tables = plan_fast.build_tables(
             graph, (end_dev, cloud_dev), (link,), qcache.node_bits)
         picks, n_fast = plan_fast.frontier_shortlist(

@@ -275,7 +275,7 @@ def run_pipeline(plans: Sequence[TaskPlan],
                  links: Optional[Sequence[Optional[LinkProfile]]] = None,
                  batch_caps: Optional[Sequence[int]] = None,
                  pools: Optional[Sequence] = None,
-                 router=None, sink=None) -> PipelineResult:
+                 router=None, sink=None, migrate=None) -> PipelineResult:
     """Execute the task stream.  ``link`` (classic) or ``links`` (one per
     hop) with a bandwidth trace re-integrates each task's transmission
     time at its actual start time (dynamic networks, Fig. 5).
@@ -286,7 +286,8 @@ def run_pipeline(plans: Sequence[TaskPlan],
     DAG path instead of the serial chain.  ``sink`` (a
     ``repro.obs.trace`` span sink) records the timeline as spans; the
     async executor emits the same spans, so traces are differentially
-    pinned like results."""
+    pinned like results.  ``migrate`` is the online re-planning hook of
+    ``sim.simulate_stream`` (chain path only)."""
     n = len(plans)
     if arrivals is None:
         arrivals = [i * arrival_period for i in range(n)]
@@ -299,12 +300,15 @@ def run_pipeline(plans: Sequence[TaskPlan],
     sim_plans = [p.as_sim_plan(n_hops) for p in plans]
     if pools is not None:
         assert router is not None, "replicated tiers need a router policy"
+        assert migrate is None, \
+            "plan migration composes with the unbatched chain path only"
         pres = sim.simulate_pool_stream(sim_plans, arrivals, pools, router,
                                         links=links, batch_caps=batch_caps,
                                         sink=sink)
         return result_from_pool_stream(pres)
     res = sim.simulate_stream(sim_plans, arrivals, links=links,
-                              batch_caps=batch_caps, sink=sink)
+                              batch_caps=batch_caps, sink=sink,
+                              migrate=migrate)
     return result_from_stream(res)
 
 

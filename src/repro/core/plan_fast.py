@@ -37,6 +37,18 @@ The planner rescores the shortlisted top-K candidates with the real
 event simulator and returns *that* argmin, so the fast path is a pure
 speedup: the chosen ``PartitionDecision`` and objective are identical
 to the naive per-candidate simulation search (argmin-equality tested).
+
+Links carrying a bandwidth *trace* are first-class: every boundary
+transfer is re-priced at its actual start instant through
+``LinkProfile.transfer_time`` inside the sparse replay — exactly the
+event simulator's integration — so ``stage_times_chain`` /
+``stage_times_frontiers`` stay trace-exact.  The vectorized closed
+forms of ``chain_sweep`` are only valid at constant bandwidth, so a
+traced sweep scores every candidate through the replay instead
+(exhaustive and exact, hence the shortlist trivially contains the
+naive argmin).  ``retime_tables`` rebinds existing tables to new link
+profiles without re-running the Eq. 1 pricing — the warm-start used by
+online re-planning (``repro.scenarios.replan``).
 """
 
 from __future__ import annotations
@@ -58,6 +70,20 @@ RELAX_EXTRAS: Tuple[int, ...] = (0, 1, 2, 4, 8)
 HI_BITS = 16
 #: Relative tolerance of ``_relax_bits``'s pipeline-ceiling acceptance.
 CEIL_TOL = 1e-9
+
+#: Per-hop pricer type: (bit volume, start instant) -> transfer duration.
+HopPricer = Callable[[float, float], float]
+
+
+def _hop_pricers(links: Sequence[LinkProfile]
+                 ) -> Optional[List[Optional[HopPricer]]]:
+    """Per-hop start-time pricers for traced links; ``None`` when every
+    hop is constant-bandwidth (the vectorized closed forms apply)."""
+    if all(lk.trace is None for lk in links):
+        return None
+    return [(lambda vol, start, lk=lk: lk.transfer_time(vol, start))
+            if lk.trace is not None else None
+            for lk in links]
 
 
 # ==================================================================== tables
@@ -85,6 +111,8 @@ class PlannerTables:
     pos_vol: Optional[np.ndarray] = None       # [L, P] total crossing volume
     pos_has_bits: Optional[np.ndarray] = None  # [P] any quantized (u>=0) edge
     pos_serial: Optional[np.ndarray] = None    # [P] single tail->head edge
+    # per-hop start-time pricers (None everywhere constant-bandwidth)
+    hop_price: Optional[List[Optional[HopPricer]]] = None
 
     @property
     def n_hops(self) -> int:
@@ -154,7 +182,8 @@ def build_tables(graph: ModelGraph, devices: Sequence[DeviceProfile],
         bw=tuple(lk.bandwidth_bps for lk in links), node_bits=node_bits,
         edge_u=eu, edge_v=ev, edge_elems=elems,
         edge_vol=np.zeros((n_lvl, len(eu))),
-        priced=np.zeros(len(eu), dtype=bool))
+        priced=np.zeros(len(eu), dtype=bool),
+        hop_price=_hop_pricers(links))
 
     if pref_counts is not None:
         pref_cnt = np.asarray(pref_counts, dtype=np.int64)
@@ -184,6 +213,25 @@ def build_tables(graph: ModelGraph, devices: Sequence[DeviceProfile],
     return tables
 
 
+def retime_tables(tables: PlannerTables,
+                  links: Sequence[LinkProfile]) -> PlannerTables:
+    """Rebind existing tables to new link profiles (warm start).
+
+    Everything bandwidth-independent is shared by reference: the compute
+    prefix sums, the chain-cut structure and the Eq. 1 edge *volumes*
+    (``edge_vol`` is bits — pricing an edge under one link set prices it
+    for all).  Only the per-hop bandwidths and traced-link pricers are
+    replaced, so an online re-plan after a regime shift skips the whole
+    oracle/table build (``repro.scenarios.replan``).
+    """
+    assert len(links) == len(tables.links), \
+        "retimed links must keep the hop count"
+    return dataclasses.replace(
+        tables, links=tuple(links),
+        bw=tuple(lk.bandwidth_bps for lk in links),
+        hop_price=_hop_pricers(links))
+
+
 # ============================================================= event replay
 # replay interval lists are sorted & disjoint by construction, so the
 # simulator's merge scan applies directly (one shared implementation)
@@ -195,7 +243,9 @@ def _replay(n_seg: int,
             seg_cum: Sequence[Callable[[int], float]],
             seg_size: Sequence[int],
             hop_edges: Sequence[Sequence[Tuple[int, int, float]]],
-            in_seg: Callable[[int, int], bool]) -> sim.TaskTimeline:
+            in_seg: Callable[[int, int], bool],
+            hop_price: Optional[Sequence[Optional[HopPricer]]] = None
+            ) -> sim.TaskTimeline:
     """Shared sparse event core: replay only the boundary events of one
     candidate partition, exactly as ``sim.simulate_partitioned_task``.
 
@@ -204,7 +254,10 @@ def _replay(n_seg: int,
     is the cumulative compute time of the segment's first ``pos`` nodes,
     ``hop_edges[k]`` the boundary tensors crossing link ``k`` as
     ``(u, v, duration)``, and ``in_seg(k, u)`` whether producer ``u``
-    lives in segment ``k``.
+    lives in segment ``k``.  With ``hop_price`` set, a hop whose pricer
+    is non-``None`` carries *bit volumes* instead of durations and each
+    transfer is priced at its actual FIFO start instant (bandwidth
+    traces — the simulator's re-integration).
     """
     n_hops = n_seg - 1
     recv: Dict[Edge, float] = {}
@@ -280,9 +333,12 @@ def _replay(n_seg: int,
                 when = recv[(u, v)]
             entries.append((when, u, v, dur))
         entries.sort(key=lambda r: (r[0], r[1], r[2]))
+        price = hop_price[k] if hop_price is not None else None
         free = 0.0
         for (when, u, v, dur) in entries:
             start = when if when > free else free
+            if price is not None:  # entry carried a bit volume
+                dur = price(dur, start)
             if first_tx[k] is None:
                 first_tx[k] = start
             free = start + dur
@@ -337,11 +393,14 @@ def _replay_chain(tables: PlannerTables, positions: Sequence[int],
         seg_pos.append(lambda u, lo=lo: u - lo)
         seg_cum.append(lambda pos, cum_k=cum_k, lo=lo: cum_k[lo + pos])
         seg_size.append(bounds[k + 1] - lo)
-    hop_edges = [[(u, v, vols[level] / tables.bw[k])
+    hp = tables.hop_price
+    hop_edges = [[(u, v, vols[level] if hp is not None and hp[k] is not None
+                   else vols[level] / tables.bw[k])
                   for (u, v, vols) in tables.pos_edges[positions[k]]]
                  for k in range(n_seg - 1)]
     return _replay(n_seg, seg_pos, seg_cum, seg_size, hop_edges,
-                   lambda k, u: bounds[k] <= u < bounds[k + 1])
+                   lambda k, u: bounds[k] <= u < bounds[k + 1],
+                   hop_price=hp)
 
 
 def _chain_overlaps(tables: PlannerTables, positions: Sequence[int],
@@ -515,20 +574,26 @@ class _FrontierScorer:
                  hop_bits: Optional[Sequence[Dict[Edge, int]]] = None
                  ) -> sim.TaskTimeline:
         t = self.tables
+        hp = t.hop_price
         hop_edges = []
         for k, idx in enumerate(self.hop_idx):
             if hop_bits is None:
-                durs = t.edge_vol[level, idx] / t.bw[k]
+                vols = t.edge_vol[level, idx]
             else:
-                durs = [t.edge_elems[i]
+                vols = [t.edge_elems[i]
                         * (t.input_bits_per_elem if u < 0
-                           else hop_bits[k].get((u, v), 32)) / t.bw[k]
+                           else hop_bits[k].get((u, v), 32))
                         for i, (u, v) in zip(idx, self.hop_uv[k])]
+            if hp is not None and hp[k] is not None:
+                durs = vols  # priced at start time inside the replay
+            else:
+                durs = [v / t.bw[k] for v in vols]
             hop_edges.append([(u, v, float(d))
                               for (u, v), d in zip(self.hop_uv[k], durs)])
         return _replay(len(self.frontiers) + 1, self.seg_pos, self.seg_cum,
                        self.seg_size, hop_edges,
-                       lambda k, u: self.seg_id[u] == k)
+                       lambda k, u: self.seg_id[u] == k,
+                       hop_price=hp)
 
 
 def stage_times_frontiers(tables: PlannerTables,
@@ -566,6 +631,46 @@ class SweepResult:
     n_pruned: int = 0                # non-serial replays skipped via bound
 
 
+def _chain_sweep_traced(tables: PlannerTables, positions: Sequence[int],
+                        n_hops: int, min_end_nodes: int,
+                        T_max: float) -> SweepResult:
+    """Traced-link chain sweep: the vectorized closed forms assume
+    constant bandwidth, so every tuple is scored *exactly* through the
+    boundary-event replay (start-time pricing) and the ladder replicates
+    ``partitioner._relax_bits`` verbatim.  Exact representatives mean
+    the shortlist trivially contains the naive argmin — no pruning
+    bounds are attempted (a trace invalidates them too)."""
+    combos = [c for c in itertools.combinations_with_replacement(
+        positions, n_hops)
+        if tables.pref_cnt[c[0]] >= min_end_nodes]
+    if not combos:
+        return SweepResult([], np.empty(0), np.empty(0, bool), 0, 0)
+    n_lvl = len(RELAX_EXTRAS)
+    rep_obj = np.empty(len(combos))
+    rep_feas = np.empty(len(combos), dtype=bool)
+    n_scored = 0
+    for ti, combo in enumerate(combos):
+        has_bits = bool(tables.pos_has_bits[list(combo)].any())
+
+        def exact(li):
+            st = StageTimes.from_timeline(_replay_chain(tables, combo, li))
+            fe = (st.stage_sum <= T_max) \
+                and st.satisfies_parallel_constraint()
+            return st.objective(), fe, st.max_stage
+
+        r_obj, r_feas, r_ms = exact(0)
+        n_scored += 1
+        if has_bits:
+            for li in range(1, n_lvl):
+                o, fe, ms = exact(li)
+                n_scored += 1
+                if o < r_obj and fe >= r_feas \
+                        and ms <= r_ms * (1 + CEIL_TOL):
+                    r_obj, r_feas, r_ms = o, fe, ms
+        rep_obj[ti], rep_feas[ti] = r_obj, r_feas
+    return SweepResult(combos, rep_obj, rep_feas, n_scored, 0)
+
+
 def chain_sweep(tables: PlannerTables, positions: Sequence[int],
                 n_hops: int, min_end_nodes: int = 1,
                 T_max: float = float("inf"),
@@ -590,7 +695,13 @@ def chain_sweep(tables: PlannerTables, positions: Sequence[int],
     near-tie selection (and hence the rescored argmin) is unchanged.
     Representative *values* for pruned tuples differ from the
     ``prune=False`` sweep, which is why the exhaustive form stays the
-    default."""
+    default.
+
+    Tables built over traced links route to the exhaustive exact replay
+    sweep (``_chain_sweep_traced``); ``prune`` is ignored there."""
+    if tables.hop_price is not None:
+        return _chain_sweep_traced(tables, positions, n_hops,
+                                   min_end_nodes, T_max)
     combos = [c for c in itertools.combinations_with_replacement(
         positions, n_hops)
         if tables.pref_cnt[c[0]] >= min_end_nodes]
@@ -771,6 +882,29 @@ def frontier_shortlist(tables: PlannerTables,
             continue
         sc = _FrontierScorer(tables, frontiers, crossing_cache=xcache)
         n_hops = len(frontiers)
+        if tables.hop_price is not None:
+            # traced links: nominal-bandwidth busy vectors are invalid,
+            # so score every level exactly from the replayed timeline
+            # (ladder acceptance identical to ``_relax_bits``)
+            def exact_traced(li):
+                st = StageTimes.from_timeline(sc.timeline(level=li))
+                fe = (st.stage_sum <= T_max) \
+                    and st.satisfies_parallel_constraint()
+                return st.objective(), fe, st.max_stage
+
+            best_obj, best_feas, best_ms = exact_traced(0)
+            n_scored += 1
+            if sc.has_bits:
+                for li in range(1, n_lvl):
+                    o, fe, ms = exact_traced(li)
+                    n_scored += 1
+                    if o < best_obj and fe >= best_feas \
+                            and ms <= best_ms * (1 + CEIL_TOL):
+                        best_obj, best_feas, best_ms = o, fe, ms
+            seqs.append(seq)
+            objs.append(best_obj)
+            feats.append(best_feas)
+            continue
         max_stage = np.maximum(sc.compute.max(), sc.link.max(axis=1))  # [L]
         stage_sum = sc.compute.sum() + sc.link.sum(axis=1)             # [L]
 

@@ -85,7 +85,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.costs import DeviceProfile, LinkProfile, ModelGraph
 from repro.obs.trace import (BATCH_FORM, CREDIT_WAIT, ENQUEUE, EXIT_RELEASE,
-                             ROUTE, SEQ_HOLD, SERVICE, XFER, Span)
+                             REPLAN, ROUTE, SEQ_HOLD, SERVICE, XFER, Span)
 
 Edge = Tuple[int, int]
 Interval = Tuple[float, float]
@@ -473,7 +473,8 @@ def simulate_stream(plans: Sequence[SimPlan],
                     links: Optional[Sequence[Optional[LinkProfile]]] = None,
                     batch_caps: Optional[Sequence[int]] = None,
                     sink=None,
-                    ingress_enqueues: Optional[Sequence[float]] = None
+                    ingress_enqueues: Optional[Sequence[float]] = None,
+                    migrate=None
                     ) -> StreamResult:
     """Replay a task stream over the ``2n+1`` serial resources.
 
@@ -501,9 +502,26 @@ def simulate_stream(plans: Sequence[SimPlan],
     ``ingress_enqueues[i]`` overrides the *reported* tier-0 enqueue
     instant of task ``i`` (the multi-tenant gate dispatches at ``t_d >=
     arrival``; the chain timeline is unaffected because the credit gate
-    never delays a task past ``max(arrival, free_0)``)."""
+    never delays a task past ``max(arrival, free_0)``).
+
+    ``migrate(i, k, tx_ready) -> Optional[SimPlan]`` is the online
+    re-planning hook (``repro.scenarios``): it is consulted once per
+    task per hop, at the instant the task's hop-``k`` boundary data is
+    ready to transmit.  Returning a plan switches task ``i`` to it for
+    the remainder of its pipeline — the hop-``k`` transfer (volume,
+    offsets) and all downstream segments are priced under the new plan,
+    while everything already replayed stays charged to the old one (a
+    task completes its current segment under the old plan, then
+    continues under the new cut/bits).  The hook's arguments depend
+    only on the task's own timeline, never on a clock, so the async
+    executor reaches identical migration decisions; the switch is
+    recorded as a ``replan`` span.  The returned plan must preserve
+    the task's hop count and exit hop.  Migration composes with the
+    unbatched chain path only (no micro-batching, no pools)."""
     assert plans, "empty stream"
     if batch_caps is not None and any(c > 1 for c in batch_caps):
+        assert migrate is None, \
+            "plan migration composes with the unbatched chain path only"
         return _simulate_stream_batched(plans, arrivals, links, batch_caps,
                                         sink=sink,
                                         ingress_enqueues=ingress_enqueues)
@@ -547,6 +565,16 @@ def simulate_stream(plans: Sequence[SimPlan],
             off = p.tx_offset[k]
             tx_ready = prev_done if off is None or off >= p.compute[k] \
                 else prev_start + off
+            if migrate is not None:
+                newp = migrate(i, k, tx_ready)
+                if newp is not None:
+                    assert len(newp.tx) == n_hops \
+                        and newp.exit_hop == p.exit_hop, \
+                        "migrated plan must preserve hop count and exit hop"
+                    p = newp
+                    if sink is not None:
+                        sink.span(Span(REPLAN, ("link", k), tx_ready,
+                                       tx_ready, task=i, hop=k))
             t_start = max(tx_ready, link_free[k])
             t_dur = p.tx[k]
             lk = links[k] if links is not None and k < len(links) else None
@@ -877,7 +905,8 @@ def simulate_multitenant_stream(
         policy,
         links: Optional[Sequence[Optional[LinkProfile]]] = None,
         batch_caps: Optional[Sequence[int]] = None,
-        sink=None
+        sink=None,
+        migrate=None
         ) -> MultiTenantStreamResult:
     """Replay tagged multi-tenant task streams over the shared ``2n+1``
     resources: compute the policy's admission order (gated by the
@@ -901,7 +930,7 @@ def simulate_multitenant_stream(
         batch_caps = [1] + [int(c) for c in batch_caps[1:]]
     res = simulate_stream(merged_plans, merged_arr, links=links,
                           batch_caps=batch_caps, sink=sink,
-                          ingress_enqueues=enqueues)
+                          ingress_enqueues=enqueues, migrate=migrate)
     return MultiTenantStreamResult(stream=res, order=tuple(order),
                                    n_tenants=len(plans))
 

@@ -32,14 +32,18 @@ one cause from the closed set ``CAUSES``:
 ``exit_released``
     a semantic early exit upstream released this resource during the
     gap: tasks that would have occupied it never arrived.
+``replanning``
+    the head task was migrated to a new plan at an upstream hop
+    boundary during the gap (``replan`` span): the idle time is the
+    cost of switching cut/bits mid-stream, not steady-state starvation.
 
 Classification precedence (first match wins, documented order):
 ``warmup``/``drain`` by position; then the two mechanisms that delay a
 head task *past its own readiness* — ``ingress_credit`` (tier-0
 compute) and ``sequencer_reorder`` (links); then, when the head was
 not ready before the gap closed, ``batch_formation``,
-``exit_released``, ``upstream_starvation`` in that order; otherwise
-``downstream_backpressure``.  Gaps partition the horizon
+``exit_released``, ``replanning``, ``upstream_starvation`` in that
+order; otherwise ``downstream_backpressure``.  Gaps partition the horizon
 minus the busy union by construction, so the conservation identity
 
     ``busy + sum(attributed bubbles) == horizon``        (per resource)
@@ -53,15 +57,15 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.obs.trace import (CREDIT_WAIT, EXIT_RELEASE, SEQ_HOLD, SERVICE,
-                             XFER, Resource, Span, TraceLike, is_link,
-                             resource_label, spans_of, tier_of)
+from repro.obs.trace import (CREDIT_WAIT, EXIT_RELEASE, REPLAN, SEQ_HOLD,
+                             SERVICE, XFER, Resource, Span, TraceLike,
+                             is_link, resource_label, spans_of, tier_of)
 
 __all__ = [
     "WARMUP", "DRAIN", "UPSTREAM_STARVATION", "DOWNSTREAM_BACKPRESSURE",
     "BATCH_FORMATION", "SEQUENCER_REORDER", "INGRESS_CREDIT",
-    "EXIT_RELEASED", "CAUSES", "Bubble", "Attribution", "attribute",
-    "chain_resources",
+    "EXIT_RELEASED", "REPLANNING", "CAUSES", "Bubble", "Attribution",
+    "attribute", "chain_resources",
 ]
 
 WARMUP = "warmup"
@@ -72,11 +76,12 @@ BATCH_FORMATION = "batch_formation"
 SEQUENCER_REORDER = "sequencer_reorder"
 INGRESS_CREDIT = "ingress_credit"
 EXIT_RELEASED = "exit_released"
+REPLANNING = "replanning"
 
 #: The closed cause set — every attributed gap carries exactly one.
 CAUSES = (WARMUP, DRAIN, UPSTREAM_STARVATION, DOWNSTREAM_BACKPRESSURE,
           BATCH_FORMATION, SEQUENCER_REORDER, INGRESS_CREDIT,
-          EXIT_RELEASED)
+          EXIT_RELEASED, REPLANNING)
 
 
 @dataclass(frozen=True)
@@ -203,6 +208,7 @@ def attribute(trace: TraceLike,
     seq_holds: Dict[int, List[Span]] = {}
     credits: Dict[int, Span] = {}
     exits: List[Tuple[float, int]] = []
+    replans: Dict[int, List[Tuple[float, int]]] = {}
     member_batch: Dict[Tuple[int, int], int] = {}
     for s in spans:
         if s.kind in (SERVICE, XFER):
@@ -217,6 +223,8 @@ def attribute(trace: TraceLike,
             credits[s.task] = s
         elif s.kind == EXIT_RELEASE:
             exits.append((s.t0, s.hop))
+        elif s.kind == REPLAN:
+            replans.setdefault(s.task, []).append((s.t0, s.hop))
 
     if resources is None:
         resources = sorted(busy_spans)
@@ -246,6 +254,14 @@ def attribute(trace: TraceLike,
             for t, hop in exits:
                 if g0 - eps <= t <= g1 + eps and _skips(res, hop):
                     return EXIT_RELEASED
+            # a migration at an upstream boundary during the gap: the
+            # head's arrival was delayed by the plan switch (a replan at
+            # hop j takes effect on link j, so it feeds link k >= j and
+            # compute k > j)
+            for t, hop in replans.get(head.task, ()):
+                if g0 - eps <= t <= g1 + eps \
+                        and (hop <= k if link else hop < k):
+                    return REPLANNING
             return UPSTREAM_STARVATION
         return DOWNSTREAM_BACKPRESSURE
 

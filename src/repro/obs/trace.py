@@ -18,6 +18,7 @@ Span kinds (the closed vocabulary):
 ``xfer``                busy: a link transfer interval
 ``credit_wait``         wait: multi-tenant ingress arrival -> credit grant
 ``exit_release``        point: semantic exit freed all downstream resources
+``replan``              point: task migrated to a new plan at a hop boundary
 ======================  ====================================================
 
 Resources are tuples: ``("compute", k, r)`` for replica ``r`` of tier
@@ -40,9 +41,9 @@ from typing import List, NamedTuple, Optional, Sequence, Tuple, Union
 
 __all__ = [
     "ENQUEUE", "ROUTE", "BATCH_FORM", "SERVICE", "SEQ_HOLD", "XFER",
-    "CREDIT_WAIT", "EXIT_RELEASE", "SPAN_KINDS", "Span", "TraceRecorder",
-    "spans_of", "canonical", "traces_match", "assert_traces_match",
-    "resource_label", "tier_of", "is_link",
+    "CREDIT_WAIT", "EXIT_RELEASE", "REPLAN", "SPAN_KINDS", "Span",
+    "TraceRecorder", "spans_of", "canonical", "traces_match",
+    "assert_traces_match", "resource_label", "tier_of", "is_link",
 ]
 
 ENQUEUE = "enqueue"
@@ -53,9 +54,10 @@ SEQ_HOLD = "seq_hold"
 XFER = "xfer"
 CREDIT_WAIT = "credit_wait"
 EXIT_RELEASE = "exit_release"
+REPLAN = "replan"
 
 SPAN_KINDS = (ENQUEUE, ROUTE, BATCH_FORM, SERVICE, SEQ_HOLD, XFER,
-              CREDIT_WAIT, EXIT_RELEASE)
+              CREDIT_WAIT, EXIT_RELEASE, REPLAN)
 
 Resource = Tuple  # ("compute", k[, r]) | ("link", k)
 
@@ -66,7 +68,8 @@ class Span(NamedTuple):
     ``task`` is the owning task (the batch head for ``service``);
     ``tasks`` the full batch membership; ``ready`` the head's
     input-ready instant (``tx_ready`` for ``xfer``); ``batch`` the
-    realized batch size; ``hop`` the exit hop for ``exit_release``;
+    realized batch size; ``hop`` the exit hop for ``exit_release`` (and
+    the boundary a ``replan`` migration took effect at);
     ``replica``/``seq`` the routing decision for ``route``.
     """
 

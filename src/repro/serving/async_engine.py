@@ -109,8 +109,8 @@ from repro.core import sim
 from repro.core.costs import LinkProfile
 from repro.core.pipeline import (PipelineResult, TaskPlan,
                                  result_from_stream)
-from repro.obs.trace import (BATCH_FORM, ENQUEUE, EXIT_RELEASE, ROUTE,
-                             SEQ_HOLD, SERVICE, XFER)
+from repro.obs.trace import (BATCH_FORM, ENQUEUE, EXIT_RELEASE, REPLAN,
+                             ROUTE, SEQ_HOLD, SERVICE, XFER)
 from repro.serving.base import EngineBase, EngineStats
 
 __all__ = ["VirtualClock", "WallClock", "HopQueue", "AsyncHopPipeline",
@@ -387,7 +387,7 @@ class AsyncHopPipeline:
                  clock=None, queue_capacity: int = 0,
                  segment_fn: Optional[Callable[[int, int, Any], Any]] = None,
                  batch_caps: Optional[Sequence[int]] = None,
-                 pools=None, router=None, sink=None):
+                 pools=None, router=None, sink=None, migrate=None):
         assert n_hops >= 1
         self.n_hops = n_hops
         self.n_seg = n_hops + 1
@@ -414,6 +414,15 @@ class AsyncHopPipeline:
         # replay — the differential pin extends to traces.  ``None``
         # (default) emits nothing and allocates nothing.
         self.sink = sink
+        # online re-planning hook ``migrate(idx, k, tx_ready)`` (see
+        # ``sim.simulate_stream``): consulted by each link worker at its
+        # task's boundary-ready instant, so both engines evaluate it
+        # with identical arguments and reach identical plan switches.
+        self.migrate = migrate
+        if migrate is not None:
+            assert self.pools is None and all(
+                c <= 1 for c in self.batch_caps), \
+                "plan migration composes with the unbatched chain path only"
         self.outputs: dict = {}
 
     def run(self, plan_fn: Callable[[int, float], Any], n_tasks: int,
@@ -608,6 +617,7 @@ class AsyncHopPipeline:
         async def link_worker(k: int, qin: HopQueue, qout: HopQueue):
             link = self.links[k] if k < len(self.links) else None
             emit = sink.span if sink is not None else None
+            migrate = self.migrate
             lres = ("link", k)
             nres = ("compute", k + 1)
             while True:
@@ -616,6 +626,20 @@ class AsyncHopPipeline:
                     await qout.put(_STOP)
                     return
                 await clock.sleep_until(msg.ready_at)    # tx_ready
+                if migrate is not None:
+                    # the hook sees exactly the simulator's arguments
+                    # (the task's own boundary-ready instant, never the
+                    # clock), so both engines switch plans identically
+                    newp = migrate(msg.idx, k, msg.ready_at)
+                    if newp is not None:
+                        assert len(newp.tx) == self.n_hops \
+                            and newp.exit_hop == msg.plan.exit_hop, \
+                            "migrated plan must preserve hop count " \
+                            "and exit hop"
+                        msg.plan = newp
+                        if emit is not None:
+                            emit((REPLAN, lres, msg.ready_at, msg.ready_at,
+                                  msg.idx, None, None, None, k))
                 t_start = clock.now
                 dur = msg.plan.tx[k]
                 if link is not None and link.trace is not None and dur > 0:
@@ -995,7 +1019,8 @@ def run_pipeline_async(plans: Sequence[TaskPlan],
                        segment_fn=None,
                        payloads: Optional[Sequence[Any]] = None,
                        batch_caps: Optional[Sequence[int]] = None,
-                       pools=None, router=None, sink=None) -> PipelineResult:
+                       pools=None, router=None, sink=None,
+                       migrate=None) -> PipelineResult:
     """Async-executor counterpart of ``core.pipeline.run_pipeline``: same
     plan normalization and result type, but the stream is *executed* by
     per-resource workers instead of replayed by ``simulate_stream``.
@@ -1006,7 +1031,10 @@ def run_pipeline_async(plans: Sequence[TaskPlan],
     ``sim.simulate_pool_stream`` instead.  ``sink`` (a
     ``repro.obs.trace`` span sink) records the executed timeline; the
     same call against ``core.pipeline.run_pipeline`` yields a matching
-    trace (``assert_traces_match``)."""
+    trace (``assert_traces_match``).  ``migrate`` is the online
+    re-planning hook (see ``sim.simulate_stream``); passing the same
+    hook object (reset between runs) to both entry points keeps the
+    differential pin across mid-stream plan switches."""
     n = len(plans)
     if arrivals is None:
         arrivals = [i * arrival_period for i in range(n)]
@@ -1018,7 +1046,8 @@ def run_pipeline_async(plans: Sequence[TaskPlan],
                             queue_capacity=queue_capacity,
                             segment_fn=segment_fn,
                             batch_caps=batch_caps,
-                            pools=pools, router=router, sink=sink)
+                            pools=pools, router=router, sink=sink,
+                            migrate=migrate)
     res = pipe.run(lambda i, _arr: sps[i], n, arrivals, payloads=payloads)
     if isinstance(res, sim.PoolStreamResult):
         from repro.core.pipeline import result_from_pool_stream
@@ -1054,7 +1083,8 @@ class AsyncCoachEngine(EngineBase):
                                 queue_capacity=self.cfg.queue_capacity,
                                 batch_caps=self.batch_caps,
                                 pools=self.pools, router=self.make_router(),
-                                sink=self.cfg.trace)
+                                sink=self.cfg.trace,
+                                migrate=self.cfg.migrate)
         res = pipe.run(admit, n, [i * arrival_period for i in range(n)])
         if isinstance(res, sim.PoolStreamResult):
             from repro.core.pipeline import result_from_pool_stream

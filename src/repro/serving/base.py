@@ -60,6 +60,12 @@ class EngineConfig:
     #                      engine's executor emits its timeline into it
     metrics: Any = None  # obs.metrics.MetricsRegistry; populated from the
     #                      run's result (and trace, when both are set)
+    # ---- online re-planning (repro.scenarios): migrate(idx, k, tx_ready)
+    #      hook consulted at every hop boundary; the same hook (reset
+    #      between runs) drives the sim replay and the executor, so the
+    #      differential pin extends across mid-stream plan switches.
+    #      Chain path only (no pools, no micro-batching).
+    migrate: Any = None
 
 
 @dataclasses.dataclass

@@ -60,6 +60,6 @@ class CoachEngine(EngineBase):
         pr = run_pipeline(plans, arrival_period=arrival_period,
                           links=self.links, batch_caps=self.batch_caps,
                           pools=self.pools, router=self.make_router(),
-                          sink=self.cfg.trace)
+                          sink=self.cfg.trace, migrate=self.cfg.migrate)
         return self._stats(pr, len(tasks), acc["exits"], acc["bits"],
                            acc["wire"], acc["correct"])

@@ -253,7 +253,7 @@ class MultiTenantHopPipeline:
                  policy: AdmissionPolicy | str = "fifo",
                  weights: Optional[Sequence[float]] = None,
                  batch_caps: Optional[Sequence[int]] = None,
-                 pools=None, router=None, sink=None):
+                 pools=None, router=None, sink=None, migrate=None):
         # tier 0 never batches under multi-tenancy: admission is credit-
         # gated one task at a time, so the ingress queue holds at most
         # one task and a tier-0 drain would diverge from the admission
@@ -265,11 +265,15 @@ class MultiTenantHopPipeline:
         # computes the same gate as a min-heap of completion instants)
         if batch_caps is not None:
             batch_caps = [1] + [int(c) for c in batch_caps[1:]]
+        # the migration hook is keyed by the *global admission slot*
+        # (``_Msg.idx``), the same index ``sim.simulate_multitenant_
+        # stream`` replays the merged stream with
         self.pipe = AsyncHopPipeline(n_hops, links=links, clock=clock,
                                      queue_capacity=queue_capacity,
                                      segment_fn=segment_fn,
                                      batch_caps=batch_caps,
-                                     pools=pools, router=router, sink=sink)
+                                     pools=pools, router=router, sink=sink,
+                                     migrate=migrate)
         self.policy = make_policy(policy, weights=weights)
 
     @property
@@ -396,7 +400,7 @@ def run_multitenant_async(plans_by_tenant: Sequence[Sequence[TaskPlan]],
                           links=None, queue_capacity: int = 0, clock=None,
                           segment_fn=None, payloads=None,
                           batch_caps: Optional[Sequence[int]] = None,
-                          pools=None, router=None, sink=None
+                          pools=None, router=None, sink=None, migrate=None
                           ) -> sim.MultiTenantStreamResult:
     """Async-executor counterpart of ``sim.simulate_multitenant_stream``
     (or, with ``pools=``, of ``sim.simulate_multitenant_pool_stream``):
@@ -414,7 +418,8 @@ def run_multitenant_async(plans_by_tenant: Sequence[Sequence[TaskPlan]],
                                   queue_capacity=queue_capacity,
                                   segment_fn=segment_fn, policy=policy,
                                   weights=weights, batch_caps=batch_caps,
-                                  pools=pools, router=router, sink=sink)
+                                  pools=pools, router=router, sink=sink,
+                                  migrate=migrate)
     plan_fns = [(lambda t: lambda i, _arr: sps[t][i])(t)
                 for t in range(len(sps))]
     return pipe.run(plan_fns, arrivals_by_tenant, payloads=payloads)

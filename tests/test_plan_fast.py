@@ -17,6 +17,7 @@ import pytest
 from repro.core import plan_fast
 from repro.core.costs import (DeviceProfile, LinkProfile, LayerNode,
                               ModelGraph, chain_graph)
+from repro.core.pipeline import bandwidth_step_trace
 from repro.core.partitioner import (QuantCache, _quantize_boundary,
                                     _relax_bits, analytic_acc_loss,
                                     brute_force, chain_flow, chain_prefixes,
@@ -284,15 +285,87 @@ def test_fast_planner_respects_chain_stride():
     assert positions[-1] == len(chain_prefixes(g)) - 1
 
 
-def test_traced_link_falls_back_to_naive_path():
-    """Links with a bandwidth trace cannot be priced by the prefix-sum
-    tables; fast=True must transparently produce the naive result."""
+def test_traced_link_fast_path_small_chain():
+    """Links with a bandwidth trace are priced per-candidate by the
+    sparse replay (the vectorized closed forms are invalid under
+    traces); fast=True must still produce the naive result exactly."""
     g = chain_graph("c", [1e8] * 6, [30_000] * 6)
     trace = LinkProfile("traced", 50e6, trace=lambda t: 50e6)
     naive = coach_offline_multihop(g, (END, CLOUD), (trace,), fast=False)
     fast = coach_offline_multihop(g, (END, CLOUD), (trace,), fast=True)
     assert fast.decision.cuts == naive.decision.cuts
     assert math.isclose(fast.objective, naive.objective, rel_tol=1e-12)
+
+
+def _step_trace(nominal_bps: float):
+    """A genuinely time-varying trace: nominal until 5 ms, then 40%."""
+    return bandwidth_step_trace([(0.0, nominal_bps / 1e6),
+                                 (0.005, 0.4 * nominal_bps / 1e6)])
+
+
+@pytest.mark.parametrize("n_hops", [1, 2])
+def test_traced_argmin_equals_naive(n_hops):
+    """The traced fast funnel (chain_sweep -> frontier_shortlist, every
+    candidate scored by exact replay) must return the naive argmin on
+    graphs large enough to actually engage it — cuts, bits and
+    objective, under a trace that changes rate mid-candidate."""
+    g = vgg16()
+    devices, links = DEPLOYMENTS[n_hops]
+    traced = tuple(LinkProfile(lk.name, lk.bandwidth_bps,
+                               trace=_step_trace(lk.bandwidth_bps))
+                   for lk in links)
+    naive = coach_offline_multihop(g, devices, traced, fast=False)
+    fast = coach_offline_multihop(g, devices, traced, fast=True)
+    assert fast.decision.cuts == naive.decision.cuts
+    assert fast.decision.all_hop_bits == naive.decision.all_hop_bits
+    assert math.isclose(fast.objective, naive.objective, rel_tol=1e-9)
+    assert fast.feasible == naive.feasible
+
+
+def test_traced_retimed_tables_warm_start():
+    """retime_tables re-links warm tables to new (possibly traced)
+    profiles without re-pricing the oracle; planning with them must
+    equal a cold run against the same links."""
+    g = vgg16()
+    devices, links = DEPLOYMENTS[1]
+    qc = QuantCache(g, 0.005, analytic_acc_loss)
+    tables = plan_fast.build_tables(
+        g, devices, links, qc.node_bits,
+        pref_counts=[len(p) for p in chain_prefixes(g)])
+    for new_links in (
+            (LinkProfile("slow", 12e6),),
+            (LinkProfile("dyn", 50e6, trace=_step_trace(50e6)),)):
+        warm = plan_fast.retime_tables(tables, new_links)
+        assert warm.bw == tuple(lk.bandwidth_bps for lk in new_links)
+        hot = coach_offline_multihop(g, devices, new_links, tables=warm)
+        cold = coach_offline_multihop(g, devices, new_links)
+        assert hot.decision.cuts == cold.decision.cuts
+        assert hot.decision.all_hop_bits == cold.decision.all_hop_bits
+        assert math.isclose(hot.objective, cold.objective, rel_tol=1e-12)
+
+
+def test_warm_tables_reject_mismatched_links():
+    """Stale warm tables (wrong nominal rates for the links being
+    planned) must be rejected, not silently misprice the search."""
+    g = chain_graph("c", [1e8] * 6, [30_000] * 6)
+    qc = QuantCache(g, 0.005, analytic_acc_loss)
+    tables = plan_fast.build_tables(
+        g, (END, CLOUD), (L1,), qc.node_bits,
+        pref_counts=[len(p) for p in chain_prefixes(g)])
+    with pytest.raises(AssertionError):
+        coach_offline_multihop(g, (END, CLOUD), (L2,), tables=tables)
+
+
+def test_brute_force_traced_fast_equals_naive():
+    rng = np.random.default_rng(3)
+    g = chain_graph("c3", rng.uniform(1e7, 1e9, 9),
+                    rng.integers(1e3, 3e5, 9))
+    traced = LinkProfile("dyn", 50e6, trace=_step_trace(50e6))
+    naive = brute_force(g, END, CLOUD, traced, fast=False)
+    fast = brute_force(g, END, CLOUD, traced, fast=True)
+    assert fast.decision.end_set == naive.decision.end_set
+    assert fast.decision.bits == naive.decision.bits
+    assert math.isclose(fast.objective, naive.objective, rel_tol=1e-9)
 
 
 def test_brute_force_fast_equals_naive():
